@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-artifact benchmarks."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+
+def save(name: str, payload: dict):
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{name}.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+
+
+def ascii_curve(values, width: int = 60, height: int = 12,
+                label: str = "") -> str:
+    """Tiny ASCII plot for terminal-readable benchmark output."""
+    import numpy as np
+    v = np.asarray(values, float)
+    if len(v) == 0:
+        return "(empty)"
+    if len(v) > width:
+        idx = np.linspace(0, len(v) - 1, width).astype(int)
+        v = v[idx]
+    lo, hi = float(v.min()), float(v.max())
+    span = (hi - lo) or 1.0
+    rows = []
+    for r in range(height, 0, -1):
+        thr = lo + span * (r - 0.5) / height
+        rows.append("".join("█" if x >= thr else " " for x in v))
+    rows.append(f"[{lo:.4g} … {hi:.4g}] {label}")
+    return "\n".join(rows)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.wall_s = time.monotonic() - self.t0

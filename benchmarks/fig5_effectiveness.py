@@ -1,0 +1,81 @@
+"""Paper Fig. 5: default vs expert-manual vs SAPPHIRE, test & product envs.
+
+Three workloads (the paper's rand/seq/write -> our train_4k / prefill_32k /
+decode_32k on yi-6b).  For each: tune on the TEST evaluator (single-pod
+analytic, noisy), then re-score all three configs on the PRODUCT
+environment (multi-pod analytic — the 2×16×16 fleet) — the paper's
+transfer experiment.  ``--compiled`` additionally validates the train_4k
+configs against the compiled dry-run evaluator (slow: one XLA compile per
+config).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.configs import get_config
+from repro.core.bo import BOConfig
+from repro.core.costmodel import MULTI_POD, SINGLE_POD
+from repro.core.evaluators import AnalyticEvaluator
+from repro.core.tuner import Sapphire, expert_manual_config
+from repro.models.config import SHAPES_BY_NAME
+
+
+WORKLOADS = ("train_4k", "prefill_32k", "decode_32k")
+
+
+def run(quick: bool = False, arch: str = "yi-6b", compiled: bool = False):
+    cfg = get_config(arch)
+    out = {}
+    for shape in WORKLOADS:
+        s = Sapphire(
+            arch=arch, shape=shape, top_k=16,
+            n_rank_samples=120 if quick else 300,
+            bo_config=BOConfig(n_init=8, n_iter=12 if quick else 32,
+                               n_candidates=512, fit_steps=80, seed=0),
+            seed=0)
+        res = s.tune()
+        # product env: noise-free rescoring on the multi-pod fleet
+        cell = SHAPES_BY_NAME[shape]
+        prod = AnalyticEvaluator(cfg, cell, MULTI_POD, noise_sigma=0.0)
+        space = res.ranking.space
+        default = space.project(space.default_config())
+        expert = expert_manual_config(space)
+        prod_scores = {
+            "default": prod.true_step(default),
+            "expert": prod.true_step(expert),
+            "sapphire": prod.true_step(space.project(res.best_config)),
+        }
+        out[shape] = {
+            "test": {"default": res.default_value,
+                     "expert": res.expert_value,
+                     "sapphire": res.best_value},
+            "product": prod_scores,
+            "speedup_vs_default_test": res.speedup_vs_default,
+            "speedup_vs_default_product":
+                prod_scores["default"] / prod_scores["sapphire"],
+            "speedup_vs_expert_test": res.speedup_vs_expert,
+        }
+        t = out[shape]
+        print(f"{shape:12s} test: d={t['test']['default']:.3f} "
+              f"e={t['test']['expert']:.3f} s={t['test']['sapphire']:.3f} "
+              f"({t['speedup_vs_default_test']:.2f}x) | product: "
+              f"d={prod_scores['default']:.3f} s={prod_scores['sapphire']:.3f} "
+              f"({t['speedup_vs_default_product']:.2f}x)")
+
+    avg_test = np.mean([out[s]["speedup_vs_default_test"] for s in WORKLOADS])
+    avg_prod = np.mean([out[s]["speedup_vs_default_product"]
+                        for s in WORKLOADS])
+    avg_expert = np.mean([out[s]["speedup_vs_expert_test"] for s in WORKLOADS])
+    print(f"\naverage speedup vs default: test {avg_test:.2f}×, "
+          f"product {avg_prod:.2f}× (paper: 2.2×)")
+    print(f"average speedup vs expert manual: {avg_expert:.2f}× (paper: 1.4×)")
+    out["average"] = {"test": float(avg_test), "product": float(avg_prod),
+                      "vs_expert": float(avg_expert)}
+    save("fig5_effectiveness", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

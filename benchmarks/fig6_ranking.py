@@ -1,0 +1,51 @@
+"""Paper Fig. 6: parameter-importance curve — the drastic drop.
+
+~300 noisy evaluations of random configurations, Lasso-path importance,
+importances sorted descending.  The claim reproduced: only a small head of
+the ~330-knob clean domain carries measurable importance.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ascii_curve, save
+from repro.configs import get_config
+from repro.core import ranking
+from repro.core.costmodel import SINGLE_POD
+from repro.core.evaluators import AnalyticEvaluator
+from repro.core.knobs import clean_space
+from repro.models.config import SHAPES_BY_NAME
+
+
+def run(quick: bool = False, arch: str = "yi-6b", shape: str = "train_4k"):
+    cfg = get_config(arch)
+    cell = SHAPES_BY_NAME[shape]
+    space, _, report = clean_space(cfg, cell, SINGLE_POD)
+    ev = AnalyticEvaluator(cfg, cell, SINGLE_POD, noise_sigma=0.025, seed=0)
+    n = 150 if quick else 300
+    rk = ranking.rank(space, ev, n_samples=n, seed=0)
+
+    imp = np.sort(rk.importance)[::-1]
+    total = imp.sum() or 1.0
+    head_mass = float(imp[:16].sum() / total)
+    inert = {k.name for k in space.knobs if k.inert}
+    n_real_top16 = sum(1 for t in rk.top(16) if t not in inert)
+
+    print(f"clean domain: {report['clean']} knobs "
+          f"({report['washed']} washed, {report['pruned']} pruned)")
+    print("sorted importance (log scale of head):")
+    print(ascii_curve(np.log10(imp[:64] + 1e-9), label="log10 importance"))
+    print(f"top-16 carries {head_mass:.1%} of total importance "
+          f"({n_real_top16}/16 are ground-truth-live knobs)")
+    print("top-8:", rk.top(8))
+
+    out = {"n_samples": n, "clean_report": report,
+           "sorted_importance": imp.tolist(), "top16": rk.top(16),
+           "top16_mass": head_mass, "n_real_top16": n_real_top16}
+    save("fig6_ranking", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

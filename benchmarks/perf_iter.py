@@ -1,0 +1,72 @@
+"""§Perf hillclimbing harness: hypothesis -> knobs -> re-lower -> terms.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch yi-6b \
+        --shape train_4k --tag H1_bf16_reduce --knob tp_reduce_dtype=bfloat16
+
+Compiles the cell with the baseline defaults + given knob overrides,
+extracts the roofline terms, prints the before/after against the recorded
+baseline artifact and appends the iteration record to
+artifacts/perf/<arch>.<shape>.jsonl (the §Perf log in EXPERIMENTS.md is
+generated from these records).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+PERF = ROOT / "artifacts" / "perf"
+
+
+def run_cell(arch, shape, knobs, multi_pod=False):
+    from repro.configs import get_config
+    from repro.launch.dryrun import compile_cell
+    from repro.models.config import SHAPES_BY_NAME
+    return compile_cell(get_config(arch), SHAPES_BY_NAME[shape], knobs,
+                        multi_pod=multi_pod)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--knob", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.launch.train import parse_knobs
+    knobs = parse_knobs(args.knob)
+    rec = run_cell(args.arch, args.shape, knobs, args.multi_pod)
+    r = rec["roofline"]
+
+    PERF.mkdir(parents=True, exist_ok=True)
+    log = PERF / f"{args.arch}.{args.shape}.jsonl"
+    entry = {"tag": args.tag, "hypothesis": args.hypothesis, "knobs": knobs,
+             "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+             "collective_s": r["collective_s"], "step_s": r["step_s"],
+             "dominant": r["dominant"],
+             "useful_flops_ratio": rec["useful_flops_ratio"],
+             "compile_s": rec["compile_s"]}
+    with log.open("a") as f:
+        f.write(json.dumps(entry) + "\n")
+
+    prev = None
+    lines = log.read_text().splitlines()
+    if len(lines) >= 2:
+        prev = json.loads(lines[-2])
+    print(f"{args.tag}: step={r['step_s']:.4f}s  c={r['compute_s']:.4f} "
+          f"m={r['memory_s']:.4f} x={r['collective_s']:.4f} "
+          f"dom={r['dominant']} useful={rec['useful_flops_ratio']:.2f}")
+    if prev:
+        d = prev["step_s"] / r["step_s"]
+        print(f"   vs prev [{prev['tag']}] step {prev['step_s']:.4f}s "
+              f"-> {d:.2f}x {'improvement' if d > 1 else 'REGRESSION'}")
+    return entry
+
+
+if __name__ == "__main__":
+    main()

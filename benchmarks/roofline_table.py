@@ -1,0 +1,73 @@
+"""§Roofline: per (arch × shape × mesh) table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all --both-meshes``) and renders the three-term roofline table with
+dominant-bottleneck classification and the MODEL_FLOPS/HLO_FLOPs "useful
+compute" ratio.  Also emits artifacts/bench/roofline_table.md, which
+EXPERIMENTS.md §Roofline embeds.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS, save
+
+DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for f in sorted(DRYRUN.glob(f"*.{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("skipped"):
+            continue
+        rows.append(d)
+    return rows
+
+
+def render(rows, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | useful FLOPs | HBM GB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        r = d["roofline"]
+        u = d.get("useful_flops_ratio")
+        mem = d["memory"].get("temp_size_gb", 0) \
+            + d["memory"].get("argument_size_gb", 0)
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {u if u is None else f'{u:.2f}'} | "
+            f"{mem:.1f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    single = load("16x16")
+    multi = load("2x16x16")
+    if not single:
+        print("no dry-run artifacts: run `python -m repro.launch.dryrun "
+              "--all --both-meshes` first")
+        return {}
+    md = render(single, "single-pod 16×16 (256 chips) — baseline") + "\n\n" \
+        + render(multi, "multi-pod 2×16×16 (512 chips)")
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / "roofline_table.md").write_text(md + "\n")
+    print(md)
+    doms = {}
+    for d in single:
+        doms[d["roofline"]["dominant"]] = doms.get(
+            d["roofline"]["dominant"], 0) + 1
+    print(f"\nsingle-pod dominant-term histogram: {doms} "
+          f"({len(single)} cells)")
+    save("roofline_summary", {"single_cells": len(single),
+                              "multi_cells": len(multi),
+                              "dominant_hist": doms})
+    return {"single": len(single), "multi": len(multi), "dominant": doms}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Run every paper-artifact benchmark:  python -m benchmarks.run [--quick]
+
+One module per paper table/figure (DESIGN.md §7):
+  fig2b  multi-peak response surface
+  fig4   dynamic vs static boundaries
+  fig6   Lasso importance curve
+  table2 top-16 knob table
+  fig7   top-64/32/16 tuning efficiency
+  fig5   default vs expert vs SAPPHIRE (+ product-env transfer)
+  sec34  BO vs SA vs GA vs random
+  roofline  §Roofline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
+                        fig5_effectiveness, fig5b_compiled_transfer,
+                        fig6_ranking, fig7_topk_efficiency, roofline_table,
+                        sec34_optimizers, table2_top16)
+
+MODULES = [
+    ("fig2b_response_surface", fig2b_response_surface),
+    ("fig6_ranking", fig6_ranking),
+    ("table2_top16", table2_top16),
+    ("fig4_dynamic_boundary", fig4_dynamic_boundary),
+    ("fig7_topk_efficiency", fig7_topk_efficiency),
+    ("sec34_optimizers", sec34_optimizers),
+    ("fig5_effectiveness", fig5_effectiveness),
+    ("fig5b_compiled_transfer", fig5b_compiled_transfer),
+    ("roofline_table", roofline_table),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sample/iteration budgets")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod.run(quick=args.quick)
+            print(f"-- {name} done in {time.monotonic() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\n{'=' * 72}")
+    if failures:
+        print(f"FAILED: {failures}")
+        return 1
+    print("all benchmarks completed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

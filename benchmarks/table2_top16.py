@@ -1,0 +1,33 @@
+"""Paper Table 2: the top-16 knobs with type / default / range."""
+
+from __future__ import annotations
+
+from benchmarks.common import save
+from repro.configs import get_config
+from repro.core import ranking
+from repro.core.costmodel import SINGLE_POD
+from repro.core.evaluators import AnalyticEvaluator
+from repro.core.knobs import clean_space
+from repro.models.config import SHAPES_BY_NAME
+
+
+def run(quick: bool = False, arch: str = "yi-6b", shape: str = "train_4k"):
+    cfg = get_config(arch)
+    cell = SHAPES_BY_NAME[shape]
+    space, _, _ = clean_space(cfg, cell, SINGLE_POD)
+    ev = AnalyticEvaluator(cfg, cell, SINGLE_POD, noise_sigma=0.025, seed=0)
+    rk = ranking.rank(space, ev, n_samples=150 if quick else 300, seed=0,
+                      stability_rounds=0 if quick else 8)
+    rows = rk.table(16)
+    hdr = f"{'knob':28s} {'type':12s} {'default':>10s} {'range':24s} {'imp':>8s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['knob']:28s} {r['type']:12s} {str(r['default']):>10s} "
+              f"{r['range']:24s} {r['importance']:8.4f}")
+    save("table2_top16", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

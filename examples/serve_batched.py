@@ -1,0 +1,54 @@
+"""Batched serving with continuous batching + KV-cache knobs.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch qwen1.5-4b]
+
+Submits a Poisson-ish stream of requests with mixed prompt lengths,
+serves them through the slot-recycling engine, and reports utilization —
+then repeats with the int8-KV knob to show the cache-budget effect
+(double the admissible slots under the same HBM fraction).
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import Model
+from repro.runconfig import RunConfig
+from repro.serve.engine import Engine
+from repro.serve.kvcache import CachePlan
+
+
+def drive(model, params, rc, n_requests=16, slots=4, s_max=96, seed=0):
+    eng = Engine(model, params, rc, slots=slots, s_max=s_max)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_requests):
+        plen = int(rng.integers(3, 24))
+        eng.submit(rng.integers(1, model.cfg.vocab_size, plen),
+                   max_new_tokens=int(rng.integers(4, 12)))
+    done = eng.run()
+    toks = sum(len(r.out_tokens) for r in done)
+    return done, toks, eng.step_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    for kv_dtype in ("bfloat16", "int8"):
+        rc = RunConfig(kv_cache_dtype=kv_dtype)
+        plan = CachePlan.build(model.cfg, rc, hbm_bytes=16e9, kv_frac=0.3)
+        done, toks, steps = drive(model, params, rc)
+        print(f"kv={kv_dtype:9s} served {len(done)} reqs / {toks} tokens in "
+              f"{steps} steps; cache admits batch "
+              f"{plan.max_batch(32768)} @32k on a v5e chip")
+
+
+if __name__ == "__main__":
+    main()

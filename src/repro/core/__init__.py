@@ -1,0 +1,11 @@
+"""SAPPHIRE core: the paper's contribution as a composable library.
+
+Public API:
+    Space / Knob / constraints    (§3.2  — repro.core.space, .constraints)
+    lasso_path / rank             (§3.3  — repro.core.lasso, .ranking)
+    gp / bo.minimize              (§3.4  — repro.core.gp, .bo)
+    Sapphire(...).tune()          (Fig 3 — repro.core.tuner)
+"""
+
+from repro.core.space import Config, Knob, Space  # noqa: F401
+from repro.core.tuner import Sapphire, TuneResult  # noqa: F401

@@ -1,0 +1,100 @@
+"""The SAPPHIRE Controller (paper Fig. 3).
+
+Owns the **evaluation database** (append-only JSONL, the paper's store of
+"all the system measurement results") and wires the Experiment Unit
+(an evaluator callable) to the Search Unit (one of the optimizers).  On a
+real fleet the controller additionally injects runtime-settable knobs
+without restart (``Knob.restart_required=False``) and schedules
+recompile/redeploy for the rest — recorded per evaluation so the
+recommendation report can state the application cost of the final config.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.space import Config, Space
+
+
+@dataclass
+class EvalRecord:
+    config: Config
+    value: float
+    wall_s: float
+    tag: str = ""
+
+
+class EvalDB:
+    """Append-only evaluation log; reloadable for warm-started ranking."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = Path(path) if path else None
+        self.records: List[EvalRecord] = []
+        if self.path and self.path.exists():
+            for line in self.path.read_text().splitlines():
+                if not line.strip():
+                    continue
+                d = json.loads(line)
+                self.records.append(EvalRecord(d["config"], d["value"],
+                                               d.get("wall_s", 0.0),
+                                               d.get("tag", "")))
+
+    def append(self, rec: EvalRecord):
+        self.records.append(rec)
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            with self.path.open("a") as f:
+                f.write(json.dumps({"config": {k: _json_safe(v) for k, v
+                                               in rec.config.items()},
+                                    "value": rec.value, "wall_s": rec.wall_s,
+                                    "tag": rec.tag}) + "\n")
+
+    def pairs(self, tag: Optional[str] = None) -> Tuple[List[Config], List[float]]:
+        rs = [r for r in self.records if tag is None or r.tag == tag]
+        return [r.config for r in rs], [r.value for r in rs]
+
+    def __len__(self):
+        return len(self.records)
+
+
+def _json_safe(v):
+    import numpy as np
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (np.bool_,)):
+        return bool(v)
+    return v
+
+
+@dataclass
+class Controller:
+    """Experiment Unit wrapper: evaluates configs, logs to the DB."""
+
+    evaluate: Callable[[Config], float]
+    db: EvalDB = field(default_factory=EvalDB)
+    tag: str = ""
+
+    def __call__(self, cfg: Config) -> float:
+        t0 = time.monotonic()
+        v = float(self.evaluate(cfg))
+        self.db.append(EvalRecord(dict(cfg), v, time.monotonic() - t0,
+                                  self.tag))
+        return v
+
+    def with_tag(self, tag: str) -> "Controller":
+        return Controller(self.evaluate, self.db, tag)
+
+    def restart_cost(self, space: Space, old: Config, new: Config) -> int:
+        """How many changed knobs force a restart/recompile (fleet cost)."""
+        n = 0
+        for k in space.knobs:
+            if old.get(k.name) != new.get(k.name) and k.restart_required:
+                n += 1
+        return n

@@ -1,0 +1,100 @@
+"""Experiment Unit backends (paper §3.1/§3.4).
+
+* :class:`AnalyticEvaluator` — the *test cluster*: the closed-form cost
+  model corrupted with multiplicative Gaussian noise (σ = 2.5 %, the
+  paper's measured benchmark deviation).  Milliseconds per call; used for
+  the 300-sample ranking phase and every optimizer-comparison benchmark.
+* :class:`CompiledEvaluator` — the *product cluster*: applies the config to
+  the real step function, ``jit().lower().compile()`` on the production
+  mesh and scores the three roofline terms extracted from the compiled
+  HLO.  Deterministic, seconds per call; used to validate recommendations
+  (the paper's Fig. 5 transfer) and for the §Perf hillclimbs.
+
+Both return *step seconds* (lower is better) and log every evaluation into
+the evaluation database (controller.py).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.costmodel import (SINGLE_POD, CostBreakdown, Hardware,
+                                  MeshShape, V5E, estimate)
+from repro.core.space import Config
+from repro.models.config import ModelConfig, ShapeCell
+
+
+def _stable_seed(cfg: Config, salt: int) -> int:
+    """Noise must be i.i.d. per *evaluation*, not per config — repeated
+    probes of one config see fresh noise (the paper's averaging dilemma)."""
+    s = json.dumps({k: str(v) for k, v in sorted(cfg.items())}, sort_keys=True)
+    h = hashlib.blake2s(f"{s}|{salt}".encode()).digest()[:8]
+    return int.from_bytes(h, "little")
+
+
+@dataclass
+class AnalyticEvaluator:
+    model_cfg: ModelConfig
+    cell: ShapeCell
+    mesh: MeshShape = SINGLE_POD
+    hw: Hardware = V5E
+    noise_sigma: float = 0.025          # paper: ±2.5 % benchmark deviation
+    seed: int = 0
+    calls: int = 0
+    history: list = field(default_factory=list)
+
+    def breakdown(self, knobs: Config) -> CostBreakdown:
+        return estimate(self.model_cfg, self.cell, self.mesh, knobs, self.hw)
+
+    def true_step(self, knobs: Config) -> float:
+        """Noise-free objective (tests / regret reporting only)."""
+        return self.breakdown(knobs).step_s
+
+    def __call__(self, knobs: Config) -> float:
+        bd = self.breakdown(knobs)
+        self.calls += 1
+        noise = 1.0
+        if self.noise_sigma > 0:
+            rng = np.random.default_rng(
+                _stable_seed(knobs, self.seed + self.calls))
+            noise = float(np.exp(rng.normal(0.0, self.noise_sigma)))
+        step = bd.step_s * noise
+        self.history.append({"knobs": dict(knobs), "step_s": step,
+                             "true_step_s": bd.step_s,
+                             "feasible": bd.feasible})
+        return step
+
+
+@dataclass
+class CompiledEvaluator:
+    """Scores a config by lowering+compiling the real step function.
+
+    Lazy-imports the launch layer so ``repro.core`` stays importable in
+    processes that must not touch jax device state (the dry-run sets
+    XLA_FLAGS before any jax import).
+    """
+    model_cfg: ModelConfig
+    cell: ShapeCell
+    multi_pod: bool = False
+    calls: int = 0
+    history: list = field(default_factory=list)
+    _cache: Dict[str, float] = field(default_factory=dict)
+
+    def __call__(self, knobs: Config) -> float:
+        from repro.launch.dryrun import compile_cell  # lazy
+        key = json.dumps({k: str(v) for k, v in sorted(knobs.items())},
+                         sort_keys=True)
+        if key in self._cache:
+            return self._cache[key]
+        res = compile_cell(self.model_cfg, self.cell, knobs,
+                           multi_pod=self.multi_pod)
+        step = res["roofline"]["step_s"]
+        self.calls += 1
+        self.history.append({"knobs": dict(knobs), "step_s": step})
+        self._cache[key] = step
+        return step

@@ -1,0 +1,236 @@
+"""Gaussian-process regression for noisy black-box objectives (paper §3.4).
+
+The paper's argument for BO-with-GP is noise tolerance: the GP's noise
+hyperparameter lets it approximate the objective *through* noise-corrupted
+observations.  Implementation:
+
+* Matérn-5/2 (default) and RBF kernels over the unit cube;
+* exact GP with Cholesky solves (≤ a few hundred points — the paper's
+  regime, where each point costs a cluster benchmark);
+* hyperparameters (lengthscale per-dim or shared, signal var, noise var)
+  fit by maximizing the log marginal likelihood with Adam on log-params,
+  jit-compiled end to end;
+* the Gram matrix hot spot is a Pallas TPU kernel
+  (kernels/gp_gram) with a jnp fallback — on a fleet the tuner itself may
+  run on an accelerator host, and the Gram matrix is its only O(n²·d) op.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SQRT5 = math.sqrt(5.0)
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _sqdist(xa, xb, inv_ls):
+    """Scaled squared distance: xa [n,d], xb [m,d], inv_ls [d] -> [n,m]."""
+    a = xa * inv_ls
+    b = xb * inv_ls
+    a2 = jnp.sum(a * a, axis=1)[:, None]
+    b2 = jnp.sum(b * b, axis=1)[None, :]
+    return jnp.maximum(a2 + b2 - 2.0 * (a @ b.T), 0.0)
+
+
+def matern52(xa, xb, lengthscale, signal_var):
+    """Matérn-5/2: smooth enough for GP-BO, rougher than RBF (default).
+
+    The sqrt is guarded with the double-``where`` trick: d/dr sqrt(r)|₀ is
+    ∞, and zero distances (diagonal) would otherwise poison the
+    marginal-likelihood gradients with NaN.
+    """
+    inv_ls = 1.0 / lengthscale
+    d2 = _sqdist(xa, xb, inv_ls)
+    safe = jnp.where(d2 > 1e-12, d2, 1.0)
+    r = jnp.where(d2 > 1e-12, jnp.sqrt(safe), 0.0)
+    s = SQRT5 * r
+    return signal_var * (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+
+
+def rbf(xa, xb, lengthscale, signal_var):
+    inv_ls = 1.0 / lengthscale
+    return signal_var * jnp.exp(-0.5 * _sqdist(xa, xb, inv_ls))
+
+
+KERNELS = {"matern52": matern52, "rbf": rbf}
+
+
+def gram(kind: str, x, lengthscale, signal_var, *, use_pallas: bool = False):
+    """Kernel Gram matrix; optionally via the Pallas tile kernel."""
+    if use_pallas and kind == "matern52":
+        from repro.kernels.gp_gram.ops import matern52_gram
+        return matern52_gram(x, lengthscale, signal_var)
+    return KERNELS[kind](x, x, lengthscale, signal_var)
+
+
+# ---------------------------------------------------------------------------
+# GP posterior
+# ---------------------------------------------------------------------------
+
+class GPParams(NamedTuple):
+    log_lengthscale: jnp.ndarray   # [d] (ARD)
+    log_signal_var: jnp.ndarray    # []
+    log_noise_var: jnp.ndarray     # []
+
+
+class GPState(NamedTuple):
+    params: GPParams
+    x: jnp.ndarray                 # [n, d] training inputs (unit cube)
+    y: jnp.ndarray                 # [n] standardized targets
+    chol: jnp.ndarray              # [n, n] cholesky of K + σ²I
+    alpha: jnp.ndarray             # [n] K⁻¹ y
+    y_mean: jnp.ndarray
+    y_std: jnp.ndarray
+
+
+def init_params(d: int, lengthscale: float = 0.3, signal: float = 1.0,
+                noise: float = 1e-2) -> GPParams:
+    return GPParams(
+        log_lengthscale=jnp.full((d,), math.log(lengthscale), jnp.float32),
+        log_signal_var=jnp.asarray(math.log(signal), jnp.float32),
+        log_noise_var=jnp.asarray(math.log(noise), jnp.float32),
+    )
+
+
+PAD_NOISE = 1e6   # pseudo-point noise: pads contribute ~nothing to the fit
+
+
+def _build(params: GPParams, x, y, kind: str, extra_noise=None):
+    ls = jnp.exp(params.log_lengthscale)
+    sv = jnp.exp(params.log_signal_var)
+    nv = jnp.exp(params.log_noise_var)
+    k = KERNELS[kind](x, x, ls, sv)
+    n = x.shape[0]
+    # relative jitter: keeps the condition number f32-safe even when the
+    # fitted signal variance is large / lengthscale long (K near rank-1)
+    diag = jnp.full((n,), nv + 1e-4 * sv + 1e-6, k.dtype)
+    if extra_noise is not None:
+        diag = diag + extra_noise
+    kn = k + jnp.diag(diag)
+    chol = jnp.linalg.cholesky(kn)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    return chol, alpha
+
+
+def neg_log_marginal(params: GPParams, x, y, kind: str, extra_noise=None):
+    chol, alpha = _build(params, x, y, kind, extra_noise)
+    n = x.shape[0]
+    return (0.5 * y @ alpha
+            + jnp.sum(jnp.log(jnp.diagonal(chol)))
+            + 0.5 * n * math.log(2 * math.pi))
+
+
+@partial(jax.jit, static_argnames=("kind", "steps"))
+def _fit(params: GPParams, x, y, kind: str, steps: int = 200,
+         lr: float = 0.05, extra_noise=None):
+    """Adam on log-hyperparameters maximizing the marginal likelihood."""
+    grad_fn = jax.value_and_grad(
+        lambda p: neg_log_marginal(p, x, y, kind, extra_noise))
+
+    def step(carry, _):
+        p, m, v, t = carry
+        loss, g = grad_fn(p)
+        g = jax.tree.map(lambda gi: jnp.nan_to_num(gi), g)  # NaN-proof step
+        t = t + 1
+        m = jax.tree.map(lambda mi, gi: 0.9 * mi + 0.1 * gi, m, g)
+        v = jax.tree.map(lambda vi, gi: 0.999 * vi + 0.001 * gi * gi, v, g)
+        mhat = jax.tree.map(lambda mi: mi / (1 - 0.9 ** t), m)
+        vhat = jax.tree.map(lambda vi: vi / (1 - 0.999 ** t), v)
+        p = jax.tree.map(lambda pi, mh, vh: pi - lr * mh / (jnp.sqrt(vh) + 1e-8),
+                         p, mhat, vhat)
+        # clamp hyperparams to sane boxes (noise floor keeps Cholesky PSD)
+        p = GPParams(
+            log_lengthscale=jnp.clip(p.log_lengthscale, math.log(1e-2), math.log(3.0)),
+            log_signal_var=jnp.clip(p.log_signal_var, math.log(1e-2), math.log(1e2)),
+            log_noise_var=jnp.clip(p.log_noise_var, math.log(1e-4), math.log(1.0)),
+        )
+        return (p, m, v, t), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (p, _, _, _), losses = jax.lax.scan(
+        step, (params, zeros, zeros, jnp.asarray(0, jnp.float32)),
+        None, length=steps)
+    return p, losses
+
+
+def _bucket(n: int) -> int:
+    """Pad count: next multiple of 16 — bounds jit recompiles to O(n/16)
+    shapes instead of one per BO iteration."""
+    return ((n + 15) // 16) * 16
+
+
+def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
+        steps: int = 200, params: Optional[GPParams] = None,
+        pad: bool = True) -> GPState:
+    """Standardize y, fit hyperparameters, build the posterior.
+
+    ``pad`` appends huge-noise pseudo-points up to a shape bucket so the
+    jit caches of ``_fit``/``predict`` are reused across BO iterations
+    (the pads' posterior influence is ~1/PAD_NOISE — negligible).
+    """
+    x = np.asarray(x, np.float32)
+    y_raw = np.asarray(y, np.float32)
+    n, d = x.shape
+    y_mean, y_std = float(y_raw.mean()), float(y_raw.std())
+    if y_std < 1e-12:
+        y_std = 1.0
+    ys = (y_raw - y_mean) / y_std
+    extra = None
+    if pad:
+        m = _bucket(n)
+        if m > n:
+            x = np.vstack([x, np.full((m - n, d), 0.5, np.float32)])
+            ys = np.concatenate([ys, np.zeros(m - n, np.float32)])
+            extra = np.zeros(m, np.float32)
+            extra[n:] = PAD_NOISE
+    xj = jnp.asarray(x)
+    yj = jnp.asarray(ys)
+    ej = None if extra is None else jnp.asarray(extra)
+    if params is None:
+        params = init_params(d)
+    params, _ = _fit(params, xj, yj, kind, steps=steps, extra_noise=ej)
+    chol, alpha = _build(params, xj, yj, kind, ej)
+    return GPState(params, xj, yj, chol, alpha,
+                   jnp.asarray(y_mean), jnp.asarray(y_std))
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def predict(state: GPState, xq, kind: str = "matern52"):
+    """Posterior mean/std at query points xq [m,d] (original y scale)."""
+    ls = jnp.exp(state.params.log_lengthscale)
+    sv = jnp.exp(state.params.log_signal_var)
+    kq = KERNELS[kind](xq, state.x, ls, sv)          # [m, n]
+    mean_s = kq @ state.alpha
+    v = jax.scipy.linalg.solve_triangular(state.chol, kq.T, lower=True)
+    var_s = jnp.maximum(sv - jnp.sum(v * v, axis=0), 1e-12)
+    mean = mean_s * state.y_std + state.y_mean
+    std = jnp.sqrt(var_s) * state.y_std
+    return mean, std
+
+
+def expected_improvement(state: GPState, xq, best_y: float,
+                         kind: str = "matern52", xi: float = 0.01):
+    """EI for *minimization* of y (y = step time / negative bandwidth)."""
+    mean, std = predict(state, xq, kind)
+    std = jnp.maximum(std, 1e-9)
+    imp = best_y - xi - mean
+    z = imp / std
+    cdf = 0.5 * (1 + jax.scipy.special.erf(z / math.sqrt(2)))
+    pdf = jnp.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+    return imp * cdf + std * pdf
+
+
+def ucb(state: GPState, xq, kind: str = "matern52", beta: float = 2.0):
+    """Lower-confidence bound for minimization (returns negated for argmax)."""
+    mean, std = predict(state, xq, kind)
+    return -(mean - beta * std)

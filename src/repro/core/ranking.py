@@ -1,0 +1,149 @@
+"""Parameter-importance ranking (paper §3.3).
+
+Pipeline:  sample the clean domain (LHS, ~300 configs — the paper's budget)
+  -> evaluate each on the test-cluster evaluator (noisy)
+  -> preprocess:  categorical -> dummy variables;  numeric + target ->
+     ``log1p`` (the paper's normalization: same order of magnitude,
+     variance-stabilized)
+  -> Lasso path -> per-feature importance (area under |β(λ)|)
+  -> fold dummy groups back to their knob (max over group)
+  -> rank, return the top-K sub-space.
+
+The returned :class:`RankingResult` carries the full importance curve so
+the Fig.-6 benchmark can plot the drastic drop-off.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lasso import lasso_path, path_importance
+from repro.core.sampling import latin_hypercube
+from repro.core.space import Config, Knob, Space
+
+
+# ---------------------------------------------------------------------------
+# preprocessing (paper §3.3: dummy encoding + log1p)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FeatureMap:
+    """Expanded design-matrix layout: feature j -> owning knob index."""
+    columns: Tuple[str, ...]
+    owner: Tuple[int, ...]       # knob index per column
+
+
+def encode(space: Space, configs: Sequence[Config]) -> Tuple[np.ndarray, FeatureMap]:
+    cols: List[str] = []
+    owner: List[int] = []
+    feats: List[np.ndarray] = []
+    for ki, k in enumerate(space.knobs):
+        vals = [c[k.name] for c in configs]
+        if k.kind == "categorical":
+            # dummy variables, one per category (paper: n binary params)
+            for choice in k.choices:
+                cols.append(f"{k.name}={choice}")
+                owner.append(ki)
+                feats.append(np.array([1.0 if v == choice else 0.0
+                                       for v in vals]))
+        elif k.kind == "bool":
+            cols.append(k.name)
+            owner.append(ki)
+            feats.append(np.array([1.0 if v else 0.0 for v in vals]))
+        else:
+            cols.append(k.name)
+            owner.append(ki)
+            x = np.array([float(v) for v in vals])
+            # log1p on magnitudes (sign-preserving for rare negatives)
+            feats.append(np.sign(x) * np.log1p(np.abs(x)))
+    return np.stack(feats, axis=1), FeatureMap(tuple(cols), tuple(owner))
+
+
+def encode_target(y: Sequence[float]) -> np.ndarray:
+    return np.log1p(np.asarray(y, np.float64))
+
+
+# ---------------------------------------------------------------------------
+# ranking
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RankingResult:
+    space: Space
+    importance: np.ndarray           # [n_knobs], descending NOT sorted
+    order: np.ndarray                # knob indices sorted by importance desc
+    feature_importance: np.ndarray   # [n_features] raw per-column
+    fmap: FeatureMap
+    samples: List[Config]
+    values: List[float]
+
+    def top(self, k: int) -> List[str]:
+        return [self.space.knobs[i].name for i in self.order[:k]]
+
+    def top_space(self, k: int) -> Space:
+        return self.space.subset(self.top(k))
+
+    def table(self, k: int = 16) -> List[Dict[str, object]]:
+        """Paper Table-2 style rows for the top-k knobs."""
+        rows = []
+        for i in self.order[:k]:
+            kn = self.space.knobs[i]
+            rng = (f"[{kn.lo:g}, {kn.hi:g}]" if kn.kind in ("int", "float")
+                   else "|".join(str(c) for c in (kn.choices or ("True", "False"))))
+            if kn.dynamic_bound:
+                rng += " (dynamic)"
+            rows.append({
+                "knob": kn.name, "type": kn.kind, "default": kn.default,
+                "range": rng, "module": kn.module,
+                "importance": float(self.importance[i]),
+                "description": kn.description,
+            })
+        return rows
+
+
+def rank(space: Space, evaluate: Callable[[Config], float],
+         n_samples: int = 300, seed: int = 0,
+         samples: Optional[List[Config]] = None,
+         values: Optional[List[float]] = None,
+         stability_rounds: int = 0) -> RankingResult:
+    """Run the §3.3 pipeline.  Pass pre-collected (samples, values) to rank
+    an existing evaluation database without new experiments.
+
+    ``stability_rounds > 0`` enables **stability selection** (beyond-paper,
+    Meinshausen & Bühlmann 2010): the lasso path is refit on that many
+    half-subsamples and each feature's importance is multiplied by its
+    selection frequency among early entrants — pure-noise features that
+    only enter on lucky subsamples are suppressed.  The paper's plain
+    single-fit ranking is the default (rounds = 0).
+    """
+    if samples is None:
+        samples = latin_hypercube(space, n_samples, seed=seed)
+    if values is None:
+        values = [float(evaluate(c)) for c in samples]
+
+    x, fmap = encode(space, samples)
+    y = encode_target(values)
+    lams, betas = lasso_path(x, y)
+    fimp = path_importance(lams, betas)
+
+    if stability_rounds > 0:
+        rng = np.random.default_rng(seed)
+        n = x.shape[0]
+        hits = np.zeros(x.shape[1])
+        for _ in range(stability_rounds):
+            idx = rng.choice(n, size=n // 2, replace=False)
+            ls, bs = lasso_path(x[idx], y[idx], n_lambdas=30)
+            early = np.abs(bs[: len(ls) // 3]).max(axis=0) > 1e-8
+            hits += early
+        fimp = fimp * (hits / stability_rounds)
+
+    n_knobs = len(space)
+    imp = np.zeros(n_knobs)
+    for col, ki in enumerate(fmap.owner):
+        imp[ki] = max(imp[ki], fimp[col])   # fold dummies to their knob
+    order = np.argsort(-imp, kind="stable")
+    return RankingResult(space, imp, order, fimp, fmap,
+                         list(samples), list(values))

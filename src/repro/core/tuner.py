@@ -1,0 +1,161 @@
+"""Sapphire: the end-to-end configuration recommender (paper Fig. 3).
+
+    result = Sapphire(arch="yi-6b", shape="train_4k").tune()
+
+runs the full pipeline:
+
+  1. build the raw knob space for (arch × shape × mesh);
+  2. §3.2 constraint resolution  -> clean domain;
+  3. §3.3 ranking: ~300 LHS samples on the test-cluster evaluator,
+     Lasso-path importance, keep top-K knobs (others pinned to default);
+  4. §3.4 GP-BO with dynamic boundaries over the top-K sub-space;
+  5. report: recommended config (merged with pins/defaults), improvement
+     over the default and over an "expert manual" config, the tuning
+     trace, and — optionally — the product-cluster (compiled) validation.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import bo, knobs as knobmod, ranking
+from repro.core.bo import BOConfig, BOTrace
+from repro.core.controller import Controller, EvalDB
+from repro.core.costmodel import MULTI_POD, SINGLE_POD, MeshShape
+from repro.core.evaluators import AnalyticEvaluator
+from repro.core.space import Config, Space
+from repro.models.config import SHAPES_BY_NAME, ModelConfig, ShapeCell
+
+
+def expert_manual_config(space: Space) -> Config:
+    """The 'expert manual tuning' baseline (paper §4.4's Micron guide
+    analogue): a sensible hand rule — flash attention with big aligned
+    blocks, full remat, biggest microbatch, bf16 grads — applied blindly,
+    i.e. without knowing the workload (which is the paper's point about
+    why it sometimes loses)."""
+    cfg = space.default_config()
+    hand = {
+        "attention_impl": "flash", "flash_block_q": 1024, "flash_block_k": 1024,
+        "remat_policy": "full", "grad_allreduce_dtype": "bfloat16",
+        "fsdp_shard_params": True, "tensor_parallel": True,
+        "pod_hierarchical_allreduce": True,
+    }
+    mb = space.knob("microbatch") if "microbatch" in space.names else None
+    if mb is not None:
+        hand["microbatch"] = int(mb.hi)
+    for k, v in hand.items():
+        if k in space.names:
+            cfg[k] = v
+    return space.project(cfg)
+
+
+@dataclass
+class TuneResult:
+    arch: str
+    shape: str
+    mesh: MeshShape
+    clean_report: Dict[str, int]
+    ranking: ranking.RankingResult
+    top_k: int
+    best_config: Config            # full config (pins + defaults + tuned)
+    best_value: float
+    default_value: float
+    expert_value: float
+    trace: BOTrace
+    final_space: Space             # after dynamic-boundary enlargements
+    n_evaluations: int
+
+    @property
+    def speedup_vs_default(self) -> float:
+        return self.default_value / max(self.best_value, 1e-12)
+
+    @property
+    def speedup_vs_expert(self) -> float:
+        return self.expert_value / max(self.best_value, 1e-12)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape,
+            "clean_domain": self.clean_report,
+            "top_k": self.top_k,
+            "top_knobs": self.ranking.top(self.top_k),
+            "best_step_s": self.best_value,
+            "default_step_s": self.default_value,
+            "expert_step_s": self.expert_value,
+            "speedup_vs_default": round(self.speedup_vs_default, 3),
+            "speedup_vs_expert": round(self.speedup_vs_expert, 3),
+            "n_evaluations": self.n_evaluations,
+            "boundary_events": self.trace.boundary_events,
+        }
+
+
+@dataclass
+class Sapphire:
+    arch: str = "yi-6b"
+    shape: str = "train_4k"
+    multi_pod: bool = False
+    top_k: int = 16
+    n_rank_samples: int = 300
+    bo_config: Optional[BOConfig] = None
+    pinned: Optional[Dict[str, object]] = None
+    noise_sigma: float = 0.025
+    seed: int = 0
+    db_path: Optional[str] = None
+    evaluator: Optional[Callable[[Config], float]] = None  # override (tests)
+
+    def _setup(self):
+        model_cfg = get_config(self.arch)
+        cell = SHAPES_BY_NAME[self.shape]
+        mesh = MULTI_POD if self.multi_pod else SINGLE_POD
+        space, pins, report = knobmod.clean_space(model_cfg, cell, mesh,
+                                                  self.pinned)
+        ev = self.evaluator or AnalyticEvaluator(
+            model_cfg, cell, mesh, noise_sigma=self.noise_sigma,
+            seed=self.seed)
+        ctrl = Controller(ev, EvalDB(self.db_path))
+        return model_cfg, cell, mesh, space, pins, report, ctrl
+
+    def tune(self) -> TuneResult:
+        model_cfg, cell, mesh, space, pins, report, ctrl = self._setup()
+
+        # ---- §3.3 ranking over the clean domain --------------------------
+        rk = ranking.rank(space, ctrl.with_tag("rank"),
+                          n_samples=self.n_rank_samples, seed=self.seed)
+        sub = rk.top_space(self.top_k)
+
+        # non-top knobs are pinned at their defaults inside the objective
+        base = space.default_config()
+
+        def objective(sub_cfg: Config) -> float:
+            full = dict(base)
+            full.update(sub_cfg)
+            return ctrl.with_tag("bo")(space.project(full))
+
+        bo_cfg = self.bo_config or BOConfig(seed=self.seed)
+        best_sub, best_v, trace, final_sub = bo.minimize(objective, sub, bo_cfg)
+
+        best_full = dict(base)
+        best_full.update(best_sub)
+        best_full = space.project(best_full)
+        best_full.update(pins)
+
+        # ---- baselines ----------------------------------------------------
+        defaults = space.project(space.default_config())
+        expert = expert_manual_config(space)
+        dv = ctrl.with_tag("default")(defaults)
+        ev_ = ctrl.with_tag("expert")(expert)
+
+        return TuneResult(
+            arch=self.arch, shape=self.shape, mesh=mesh,
+            clean_report=report, ranking=rk, top_k=self.top_k,
+            best_config=best_full, best_value=best_v,
+            default_value=dv, expert_value=ev_,
+            trace=trace, final_space=final_sub,
+            n_evaluations=len(ctrl.db),
+        )

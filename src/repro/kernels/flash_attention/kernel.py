@@ -1,0 +1,150 @@
+"""Pallas TPU flash-attention forward (causal / windowed / soft-capped GQA).
+
+TPU-native design (not a CUDA port):
+
+* the KV loop is the **last grid dimension** — on TPU the grid is executed
+  sequentially per core, so the online-softmax running state (m, l, acc)
+  lives in VMEM scratch and survives across KV iterations; there is no
+  cross-block shared-memory protocol like on GPU;
+* BlockSpecs tile q/k/v/o into VMEM; block sizes are SAPPHIRE knobs
+  (``flash_block_q``/``flash_block_k``, C2-aligned to multiples of 128 so
+  the [bq, bk] score tile is MXU-shaped);
+* fully-masked KV blocks (strictly above the causal diagonal, or outside
+  the sliding window) are *skipped* with ``pl.when`` — for causal
+  attention this halves the executed MACs, matching the cost model's 0.5
+  causal factor;
+* GQA is resolved in the index maps: query head h reads KV head
+  ``h // (H // Kh)`` — no materialized ``jnp.repeat`` of K/V (the
+  reference path pays that HBM cost; the kernel does not).
+
+Validated in interpret mode against ``ref.reference_attention`` over a
+shape/dtype/window/softcap sweep (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128          # TPU lane width: scratch running stats use a full lane
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], sq_valid: int, sk_valid: int,
+            block_q: int, block_k: int, n_kb: int):
+    i = pl.program_id(1)          # q block index
+    j = pl.program_id(2)          # kv block index (sequential innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    # Static-shape masks are built from iota; whether the block can be
+    # skipped entirely is a *traced* predicate on (i, j).
+    never_visible = jnp.logical_and(
+        jnp.asarray(causal), k_start > q_start + block_q - 1)
+    if window is not None:
+        never_visible = jnp.logical_or(
+            never_visible, k_start + block_k - 1 <= q_start - window)
+
+    @pl.when(jnp.logical_not(never_visible))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.logical_and(qi < sq_valid, ki < sk_valid)
+        if causal:
+            mask = jnp.logical_and(mask, ki <= qi)
+        if window is not None:
+            mask = jnp.logical_and(mask, ki > qi - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                               # [bq, 1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)           # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                     # rescale old state
+        p = jnp.exp(s - m_new)                              # [bq, bk]
+        p = jnp.where(mask, p, 0.0)                         # kill -inf rows
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        block_q: int = 512, block_k: int = 512,
+                        sq_valid: Optional[int] = None,
+                        sk_valid: Optional[int] = None,
+                        interpret: bool = False):
+    """q [BH, Sq, D]; k/v [BKh, Sk, D]; Sq % block_q == Sk % block_k == 0.
+
+    BH = B·H, BKh = B·Kh with H % Kh == 0; returns [BH, Sq, D] in q.dtype.
+    ``sq_valid``/``sk_valid`` mark the unpadded lengths.
+    """
+    BH, Sq, D = q.shape
+    BKh, Sk, _ = k.shape
+    assert BH % BKh == 0, "GQA: q heads must be a multiple of kv heads"
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    rep_total = BH // BKh
+    n_qb, n_kb = Sq // block_q, Sk // block_k
+    sq_valid = Sq if sq_valid is None else sq_valid
+    sk_valid = Sk if sk_valid is None else sk_valid
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        softcap=softcap, sq_valid=sq_valid, sk_valid=sk_valid,
+        block_q=block_q, block_k=block_k, n_kb=n_kb)
+
+    # GQA in the index map: flat q index b -> flat kv index.  BH is laid
+    # out [B, H] and BKh as [B, Kh]; with rep = H // Kh this is
+    # (b // H) * Kh + (b % H) // rep == b // rep_total ... only when Kh
+    # divides contiguously — we flatten as [B*Kh, rep] on the wrapper side
+    # so the map is simply b // rep_total.
+    kv_map = lambda b, i, j: (b // rep_total, j, 0)       # noqa: E731
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),      # acc
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running sum l
+        ],
+        interpret=interpret,
+    )(q, k, v)

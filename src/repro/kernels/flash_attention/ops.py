@@ -1,0 +1,60 @@
+"""jit'd wrapper: model-layout in/out, padding, backend dispatch.
+
+``flash_attention(q, k, v)`` takes the model-zoo layout [B, S, H, D] /
+[B, S, Kh, D], pads sequence lengths up to the block grid, flattens heads,
+runs the Pallas kernel (interpret mode off-TPU) and restores the layout.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _pad_to(x, target: int, axis: int):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    """q [B,Sq,H,D], k/v [B,Sk,Kh,D] -> [B,Sq,H,D] (q.dtype)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, H, D = q.shape
+    _, Sk, Kh, _ = k.shape
+
+    bq = min(block_q, max(_round_up(Sq, 8), 8))
+    bk = min(block_k, max(_round_up(Sk, 8), 8))
+    sq_pad = _round_up(Sq, bq)
+    sk_pad = _round_up(Sk, bk)
+
+    qf = _pad_to(q, sq_pad, 1).transpose(0, 2, 1, 3).reshape(B * H, sq_pad, D)
+    kf = _pad_to(k, sk_pad, 1).transpose(0, 2, 1, 3).reshape(B * Kh, sk_pad, D)
+    vf = _pad_to(v, sk_pad, 1).transpose(0, 2, 1, 3).reshape(B * Kh, sk_pad, D)
+
+    o = flash_attention_fwd(qf, kf, vf, causal=causal, window=window,
+                            softcap=softcap, block_q=bq, block_k=bk,
+                            sq_valid=Sq, sk_valid=Sk, interpret=interpret)
+    o = o.reshape(B, H, sq_pad, D).transpose(0, 2, 1, 3)
+    return o[:, :Sq]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

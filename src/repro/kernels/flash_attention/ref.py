@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel (materializes scores)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """q [B,Sq,H,D], k/v [B,Sk,Kh,D] -> [B,Sq,H,D] (q.dtype), f32 math."""
+    B, Sq, H, D = q.shape
+    _, Sk, Kh, _ = k.shape
+    rep = H // Kh
+    kr = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+    return o.astype(q.dtype)

@@ -1,0 +1,54 @@
+"""jit'd wrapper: lengthscale scaling, padding, backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gp_gram.kernel import matern52_gram_fwd
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matern52_gram(x, lengthscale, signal_var, *, block: int = 128,
+                  interpret: bool = None):
+    """x [n, d] -> Matérn-5/2 Gram [n, n] (f32); ARD lengthscale [d]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = x.shape
+    xs = (x / lengthscale).astype(jnp.float32)
+    bn = min(block, _round_up(n, 8))
+    npad = _round_up(n, bn)
+    if npad > n:
+        # pad rows far away (distance huge -> kernel ~0); sliced off below
+        xs = jnp.pad(xs, ((0, npad - n), (0, 0)), constant_values=1e4)
+    g = matern52_gram_fwd(xs, xs, signal_var=1.0, block_n=bn, block_m=bn,
+                          interpret=interpret)
+    return g[:n, :n] * signal_var
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def matern52_cross(xa, xb, lengthscale, signal_var, *, block: int = 128,
+                   interpret: bool = None):
+    """Cross-Gram [n, m] for acquisition batches."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = xa.shape
+    m, _ = xb.shape
+    a = (xa / lengthscale).astype(jnp.float32)
+    b = (xb / lengthscale).astype(jnp.float32)
+    bn = min(block, _round_up(n, 8))
+    bm = min(block, _round_up(m, 8))
+    np_, mp = _round_up(n, bn), _round_up(m, bm)
+    if np_ > n:
+        a = jnp.pad(a, ((0, np_ - n), (0, 0)), constant_values=1e4)
+    if mp > m:
+        b = jnp.pad(b, ((0, mp - m), (0, 0)), constant_values=-1e4)
+    g = matern52_gram_fwd(a, b, signal_var=1.0, block_n=bn, block_m=bm,
+                          interpret=interpret)
+    return g[:n, :m] * signal_var

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: delegates to gp.matern52 (the production fallback)."""
+
+from __future__ import annotations
+
+from repro.core.gp import matern52
+
+
+def matern52_gram_ref(x, lengthscale, signal_var):
+    return matern52(x, x, lengthscale, signal_var)
+
+
+def matern52_cross_ref(xa, xb, lengthscale, signal_var):
+    return matern52(xa, xb, lengthscale, signal_var)

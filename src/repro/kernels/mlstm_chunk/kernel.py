@@ -1,0 +1,113 @@
+"""Pallas TPU chunkwise-parallel mLSTM forward.
+
+The mLSTM (xLSTM's matrix-memory cell) is a gated linear-attention
+recurrence.  The TPU-native formulation splits the sequence into chunks:
+*within* a chunk everything is dense MXU work ([C,C] and [C,P] matmuls);
+*across* chunks only the (P×P) matrix memory, the (P,) normalizer and a
+scalar stabilizer are carried.  The chunk axis is the **last grid
+dimension** (sequential on TPU), so the carry lives in VMEM scratch —
+the same state-in-scratch pattern as the flash kernel's online softmax,
+which is exactly how a GPU "recurrence" maps onto the TPU grid model.
+
+Stabilization matches the xLSTM paper (max-gate subtraction); numerics are
+validated against the sequential oracle (ref.py) and against the model's
+chunked jnp path (models/xlstm.py) in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+            c_ref, n_ref, m_ref, *, chunk: int, p_dim: int):
+    t = pl.program_id(1)          # chunk index (sequential)
+
+    @pl.when(t == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)          # [C, P]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)        # [C]
+    lf = lf_ref[0].astype(jnp.float32)
+
+    m_prev = m_ref[0, 0]
+    c_prev = c_ref[...]                        # [P, P]
+    n_prev = n_ref[:, 0]                       # [P]
+
+    cum = jnp.cumsum(lf)                       # [C] inclusive
+    # D[i, j] = cum_i - cum_j + li_j  for j <= i
+    d_mat = cum[:, None] - cum[None, :] + li[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    d_mat = jnp.where(jj <= ii, d_mat, NEG_INF)
+
+    m_loc = jnp.max(d_mat, axis=1)                            # [C]
+    m_comb = jnp.maximum(jnp.maximum(m_loc, cum + m_prev), NEG_INF)
+    w = jnp.exp(d_mat - m_comb[:, None])                      # [C, C]
+
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    s = qk * w
+    h_intra = jnp.dot(s, v, preferred_element_type=jnp.float32)   # [C, P]
+    n_intra = jnp.dot(w, k, preferred_element_type=jnp.float32)   # [C, P]
+
+    scale_in = jnp.exp(cum + m_prev - m_comb)                 # [C]
+    h_inter = jnp.dot(q, c_prev,
+                      preferred_element_type=jnp.float32) * scale_in[:, None]
+    n_all = n_intra + n_prev[None, :] * scale_in[:, None]
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_all * q, axis=1)),
+                        jnp.exp(-m_comb))
+    o_ref[0] = ((h_intra + h_inter) / denom[:, None]).astype(o_ref.dtype)
+
+    # ---- carry update ------------------------------------------------------
+    total = cum[-1]
+    m_new = jnp.maximum(total + m_prev, jnp.max(total - cum + li))
+    wk = jnp.exp(total - cum + li - m_new)                    # [C]
+    decay = jnp.exp(total + m_prev - m_new)
+    kw = k * wk[:, None]
+    c_ref[...] = c_prev * decay + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_new = n_prev * decay + jnp.sum(kw, axis=0)
+    n_ref[...] = jnp.broadcast_to(n_new[:, None], n_ref.shape)
+    m_ref[...] = jnp.full_like(m_ref, m_new)
+
+
+def mlstm_chunk_fwd(q, k, v, logi, logf, *, chunk: int = 256,
+                    interpret: bool = False):
+    """q/k/v [BH, S, P]; logi/logf [BH, S] (f32); S % chunk == 0.
+
+    k must already carry the 1/sqrt(P) scale.  Returns h [BH, S, P] (q.dtype).
+    """
+    BH, S, P = q.shape
+    assert S % chunk == 0, "chunk must divide sequence length"
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, p_dim=P)
+    seq_spec = pl.BlockSpec((1, chunk, P), lambda b, t: (b, t, 0))
+    gate_spec = pl.BlockSpec((1, chunk), lambda b, t: (b, t))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[seq_spec, seq_spec, seq_spec, gate_spec, gate_spec],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((P, P), jnp.float32),      # matrix memory C
+            pltpu.VMEM((P, 128), jnp.float32),    # normalizer n (lane-repl.)
+            pltpu.VMEM((8, 128), jnp.float32),    # stabilizer m (scalar)
+        ],
+        interpret=interpret,
+    )(q, k, v, logi, logf)

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the chunkwise mLSTM kernel (model layout in/out)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q, k, v, logi, logf, *, chunk: int = 256,
+                interpret: bool = None):
+    """q/k/v [B,S,H,P], logi/logf [B,S,H] -> h [B,S,H,P].
+
+    k must already carry the 1/sqrt(P) scale (as models/xlstm.py projects).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, P = q.shape
+    to_flat = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, P)  # noqa
+    gate_flat = lambda t: t.transpose(0, 2, 1).reshape(B * H, S)      # noqa
+    h = mlstm_chunk_fwd(to_flat(q), to_flat(k), to_flat(v),
+                        gate_flat(logi).astype(jnp.float32),
+                        gate_flat(logf).astype(jnp.float32),
+                        chunk=min(chunk, S), interpret=interpret)
+    return h.reshape(B, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: sequential stabilized mLSTM recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_sequential(q, k, v, logi, logf):
+    """q/k/v [B,S,H,P], logi/logf [B,S,H] (k pre-scaled) -> h [B,S,H,P]."""
+    B, S, H, P = q.shape
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    li = logi.astype(jnp.float32)
+    lf = logf.astype(jnp.float32)
+
+    def step(state, t):
+        c, n, m = state                                     # [B,H,P,P] ...
+        m_new = jnp.maximum(lf[:, t] + m, li[:, t])
+        fw = jnp.exp(lf[:, t] + m - m_new)
+        iw = jnp.exp(li[:, t] - m_new)
+        c = c * fw[..., None, None] + iw[..., None, None] * jnp.einsum(
+            "bhp,bhr->bhpr", kf[:, t], vf[:, t])
+        n = n * fw[..., None] + iw[..., None] * kf[:, t]
+        num = jnp.einsum("bhp,bhpr->bhr", qf[:, t], c)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qf[:, t])),
+                          jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    st = (jnp.zeros((B, H, P, P), jnp.float32),
+          jnp.zeros((B, H, P), jnp.float32),
+          jnp.full((B, H), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, st, jnp.arange(S))
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype)

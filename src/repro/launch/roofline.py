@@ -1,0 +1,360 @@
+"""Roofline extraction from compiled HLO (§Roofline of EXPERIMENTS.md).
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, not
+×trip-count (verified empirically on this container), so a scanned 48-layer
+model would look 48× too cheap.  This module re-derives the three roofline
+terms by parsing the post-SPMD optimized HLO text:
+
+  * split the module into computations;
+  * per computation: dot/convolution FLOPs from operand shapes, an HBM
+    traffic proxy (op output bytes + parameter bytes), and collective bytes
+    (all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute — sum of result-shape bytes, the per-device proxy);
+  * build the call graph (while body/cond with parsed trip counts, fusion
+    ``calls=``, ``to_apply=``, conditional branches) and accumulate costs
+    ×multiplier from ENTRY.
+
+Post-SPMD shapes are PER-DEVICE, so terms divide by per-chip peak rates:
+
+    compute_s    = flops_per_device   / peak_flops
+    memory_s     = hbm_bytes_proxy    / hbm_bw
+    collective_s = collective_bytes   / ici_bw
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.costmodel import Hardware, V5E
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f8e4m3fn|f8e5m2|[fsuc]\d+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_CALL_ATTRS = ("to_apply=", "condition=", "body=", "calls=")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shape(line: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(line)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d.strip()]
+    return m.group(1), dims
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes_proxy: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    # (callee, mult, include_bytes): fusion bodies contribute flops but not
+    # HBM bytes (their intermediates live in registers/VMEM)
+    calls: List[Tuple[str, float, bool]] = field(default_factory=list)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (body, cond)
+    trip_hint: Optional[int] = None          # if this is a while condition
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    buf: List[str] = []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        hdr = _COMP_HDR.match(line) or _COMP_HDR.match(stripped)
+        if hdr and "{" in line:
+            cur = hdr.group(1)
+            buf = []
+            comps[cur] = buf
+            continue
+        if stripped == "}" or stripped.startswith("} //"):
+            cur = None
+            continue
+        if cur is not None:
+            buf.append(stripped)
+    return comps
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _line_shapes_bytes(line: str, upto: Optional[int] = None) -> int:
+    seg = line if upto is None else line[:upto]
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(seg))
+
+
+def _def_shape_dims(line: str) -> Optional[List[List[int]]]:
+    """Result shape(s) of an op-definition line (list per tuple element)."""
+    eq = line.find("=")
+    if eq < 0:
+        return None
+    # shapes between '=' and the op name '(': first '(' after a word char
+    m_op = re.search(r"=\s*(\(?[^=]*?)\s[a-z][\w\-]*\(", line)
+    seg = line[eq:m_op.end()] if m_op else line[eq:]
+    out = [[int(d) for d in m.group(2).split(",") if d.strip()]
+           for m in _SHAPE_RE.finditer(seg)]
+    return out or None
+
+
+def _dot_flops(line: str, defs: Dict[str, List[int]]) -> float:
+    """FLOPs of a dot op: 2 × prod(output) × prod(contracted lhs dims).
+
+    Post-optimization HLO omits operand shapes inline, so the lhs shape is
+    looked up from the computation/module symbol table ``defs``.
+    """
+    shapes = _def_shape_dims(line)
+    if not shapes:
+        return 0.0
+    out = 1
+    for d in shapes[0]:
+        out *= d
+    dot_at = line.find(" dot(")
+    ops = _OPERANDS_RE.findall(line[dot_at:])
+    lhs_dims = defs.get(ops[0]) if ops else None
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contract = [int(i) for i in m.group(1).split(",")] if m and m.group(1) \
+        else []
+    c = 1
+    if lhs_dims:
+        for i in contract:
+            if i < len(lhs_dims):
+                c *= lhs_dims[i]
+    # TPU bf16 precision passes: default 1, high ~3, highest ~6 — shapes
+    # don't change, so the multiplier must come from the attribute
+    mult = 1.0
+    if "operand_precision={high," in line:
+        mult = 3.0
+    elif "operand_precision={highest," in line:
+        mult = 6.0
+    return 2.0 * out * c * mult
+
+
+def _conv_flops(line: str, defs: Dict[str, List[int]]) -> float:
+    """Convolution FLOPs ≈ 2 × prod(output) × (kernel taps × in-ch)."""
+    shapes = _def_shape_dims(line)
+    if not shapes:
+        return 0.0
+    out = 1
+    for d in shapes[0]:
+        out *= d
+    conv_at = line.find(" convolution(")
+    ops = _OPERANDS_RE.findall(line[conv_at:])
+    ker = defs.get(ops[1]) if len(ops) > 1 else None
+    if not ker:
+        return 2.0 * out
+    kprod = 1
+    for d in ker:
+        kprod *= d
+    out_ch = shapes[0][-1] if shapes[0] else 1
+    return 2.0 * out * max(kprod // max(out_ch, 1), 1)
+
+
+def _build_defs(lines: List[str]) -> Dict[str, List[int]]:
+    """Symbol table: op name -> result dims (first tuple element)."""
+    defs: Dict[str, List[int]] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        dims = _def_shape_dims(line)
+        if dims:
+            defs[m.group(1)] = dims[0]
+    return defs
+
+
+def _analyze_comp(lines: List[str], defs: Dict[str, List[int]]) -> CompCost:
+    c = CompCost()
+    max_const = 0
+    has_lt = False
+    for line in lines:
+        is_def = _DEF_RE.match(line) is not None
+        res_dims = _def_shape_dims(line) if is_def else None
+        # HBM proxy: result bytes of *top-level* ops (fusion internals are
+        # excluded by not traversing fusion bodies for bytes).  Metadata
+        # ops move no bytes; dynamic-update-slice writes only its update.
+        skip = any(f" {op}(" in line for op in
+                   ("tuple", "get-tuple-element", "bitcast", "constant",
+                    "after-all", "partition-id", "iota", "parameter",
+                    "while", "conditional"))
+        if res_dims is not None and not skip:
+            if " dynamic-update-slice(" in line:
+                at = line.find(" dynamic-update-slice(")
+                ops_ = _OPERANDS_RE.findall(line[at:])
+                upd = defs.get(ops_[1]) if len(ops_) > 1 else None
+                if upd is not None:
+                    n = 1
+                    for d in upd:
+                        n *= d
+                    c.bytes_proxy += n * 4        # update write (+read)
+                    continue
+            if "dynamic-update-slice" in line.split("=")[0]:
+                # fusion whose root is a DUS into a scan-stacked buffer:
+                # one iteration writes ONE slice, not the whole stack
+                lead = res_dims[0][0] if res_dims[0] else 1
+                n = 1
+                for d in res_dims[0]:
+                    n *= d
+                mdt = _SHAPE_RE.search(line[line.find("="):])
+                bpe = DTYPE_BYTES.get(mdt.group(1), 4) if mdt else 4
+                c.bytes_proxy += n * bpe / max(lead, 1)
+                continue
+            for dims in res_dims:
+                n = 1
+                for d in dims:
+                    n *= d
+                mdt = _SHAPE_RE.search(line[line.find("="):])
+                bpe = DTYPE_BYTES.get(mdt.group(1), 4) if mdt else 4
+                c.bytes_proxy += n * bpe
+        if " dot(" in line:
+            c.flops += _dot_flops(line, defs)
+        elif " convolution(" in line:
+            c.flops += _conv_flops(line, defs)
+        for kind in COLLECTIVES:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                op_at = line.find(f" {kind}")
+                b = _line_shapes_bytes(line, op_at)
+                # The CPU backend PROMOTES bf16 reductions to f32 (its
+                # reducers lack native bf16); TPU reduces bf16 natively.
+                # Promoted all-reduces are tagged `to_apply=%..promoted`
+                # — halve their bytes to model the TPU target.
+                if kind == "all-reduce" and "promot" in line:
+                    b *= 0.5
+                c.collective_bytes += b
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + b
+                break
+        m = re.search(r"constant\((\d+)\)", line)
+        if m:
+            max_const = max(max_const, int(m.group(1)))
+        if "direction=LT" in line or "direction=GT" in line:
+            has_lt = True
+        # call edges
+        if " while(" in line:
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if mb and mc:
+                c.whiles.append((mb.group(1), mc.group(1)))  # paired!
+        else:
+            include_bytes = " fusion(" not in line
+            for attr in ("calls=", "to_apply=", "condition=", "body="):
+                for m2 in re.finditer(attr + r"%?([\w\.\-]+)", line):
+                    c.calls.append((m2.group(1), 1.0, include_bytes))
+            m3 = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if m3:
+                for name in m3.group(1).split(","):
+                    c.calls.append((name.strip().lstrip("%"), 1.0, True))
+    # trip hint: the largest scalar constant in the computation.  Only
+    # consulted for computations referenced via ``condition=`` (where the
+    # loop bound constant lives; the LT compare itself may sit in a fused
+    # callee), so body-side constants never masquerade as trip counts.
+    if max_const > 0:
+        c.trip_hint = max_const
+    return c
+
+
+@dataclass
+class RooflineReport:
+    flops: float                 # per-device, trip-corrected
+    bytes_proxy: float           # per-device HBM traffic proxy
+    collective_bytes: float      # per-device
+    coll_by_kind: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    step_s: float
+    dominant: str
+    raw_cost_analysis: Dict[str, float]
+    trip_counts: Dict[str, int]
+
+    def terms(self) -> Dict[str, float]:
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "step_s": self.step_s,
+                "dominant": self.dominant}
+
+
+def analyze_hlo(hlo_text: str, hw: Hardware = V5E,
+                raw_cost: Optional[Dict[str, float]] = None) -> RooflineReport:
+    comps = _split_computations(hlo_text)
+    # module-wide symbol table (HLO op names are unique per module)
+    defs: Dict[str, List[int]] = {}
+    for lines in comps.values():
+        defs.update(_build_defs(lines))
+    costs = {name: _analyze_comp(lines, defs) for name, lines in comps.items()}
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        # fall back: the computation named main-ish or the largest
+        entry = max(costs, key=lambda n: len(comps[n])) if costs else None
+
+    total = CompCost()
+    trip_counts: Dict[str, int] = {}
+    visiting: set = set()
+
+    def accumulate(name: str, mult: float, include_bytes: bool = True):
+        if name not in costs or mult <= 0 or name in visiting:
+            return
+        visiting.add(name)
+        c = costs[name]
+        total.flops += c.flops * mult
+        if include_bytes:
+            total.bytes_proxy += c.bytes_proxy * mult
+        total.collective_bytes += c.collective_bytes * mult
+        for k, v in c.coll_by_kind.items():
+            total.coll_by_kind[k] = total.coll_by_kind.get(k, 0.0) + v * mult
+        for body, cond in c.whiles:
+            trip = 1
+            if cond in costs and costs[cond].trip_hint:
+                trip = costs[cond].trip_hint
+            trip_counts[body] = max(trip_counts.get(body, 0), trip)
+            accumulate(cond, mult, include_bytes)
+            accumulate(body, mult * trip, include_bytes)
+        for callee, m, inc_b in c.calls:
+            accumulate(callee, mult * m, include_bytes and inc_b)
+        visiting.discard(name)
+
+    if entry:
+        accumulate(entry, 1.0)
+
+    compute_s = total.flops / hw.peak_flops
+    memory_s = total.bytes_proxy / hw.hbm_bw
+    collective_s = total.collective_bytes / hw.ici_bw
+    step = max(compute_s, memory_s, collective_s)
+    dominant = ("compute" if step == compute_s else
+                "memory" if step == memory_s else "collective")
+    step += 0.15 * (compute_s + memory_s + collective_s - step)
+    return RooflineReport(
+        flops=total.flops, bytes_proxy=total.bytes_proxy,
+        collective_bytes=total.collective_bytes,
+        coll_by_kind=dict(total.coll_by_kind),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        step_s=step, dominant=dominant,
+        raw_cost_analysis=raw_cost or {}, trip_counts=trip_counts,
+    )
+
+
+def model_flops(n_params_active: int, tokens: int, train: bool) -> float:
+    """The 6·N·D (train) / 2·N·D (inference) reference quantity."""
+    return (6.0 if train else 2.0) * n_params_active * tokens

@@ -1,0 +1,6 @@
+from repro.models.config import (  # noqa: F401
+    ATTN, MAMBA, MLSTM, SLSTM, MLP_DENSE, MLP_MOE, MLP_NONE,
+    LayerSpec, ModelConfig, ShapeCell, SHAPES, SHAPES_BY_NAME,
+    applicable_shapes,
+)
+from repro.models.model import Model, make_model  # noqa: F401

@@ -1,0 +1,175 @@
+"""Parameter helpers, norms and activations shared by the model zoo.
+
+Convention: every layer module exposes
+    init(rng, cfg, ...)  -> params  (pytree of arrays)
+    axes(cfg, ...)       -> pytree of logical-axis tuples, same structure
+    apply(params, x, ...)-> output
+Parameters are created in ``param_dtype`` (bf16 by default) with f32 master
+copies owned by the optimizer (train/optimizer.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16, "int8": jnp.int8}[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(rng, shape, scale: float, dtype=jnp.bfloat16):
+    """Truncated-normal init with fan-in style scale."""
+    std = scale / math.sqrt(max(shape[0], 1)) if len(shape) >= 2 else scale
+    x = jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std
+    return x.astype(dtype)
+
+
+def dense_init(rng, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.bfloat16, scale: float = 1.0):
+    kw, kb = jax.random.split(rng)
+    p = {"w": trunc_normal(kw, (in_dim, out_dim), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_axes(in_axis: Optional[str], out_axis: Optional[str], *, bias: bool = False):
+    ax = {"w": (in_axis, out_axis)}
+    if bias:
+        ax["b"] = (out_axis,)
+    return ax
+
+
+@jax.custom_vjp
+def _mm_bf16_reduce(x, w):
+    """Matmul whose cross-shard partial sums (fwd AND bwd dgrad) combine
+    in bf16 — halves every TP activation all-reduce.  The MXU still
+    accumulates f32 internally; only the inter-chip combine narrows
+    (Megatron's standard trade).  Weight grads stay f32-accumulated."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.bfloat16)
+
+
+def _mm_bf16_fwd(x, w):
+    return _mm_bf16_reduce(x, w), (x, w)
+
+
+def _mm_bf16_bwd(res, g):
+    x, w = res
+    gb = g.astype(jnp.bfloat16)             # cotangent in bf16: dgrad AR halves
+    dx = jnp.matmul(gb, w.T, preferred_element_type=jnp.bfloat16)
+    dw = jnp.matmul(x.reshape(-1, x.shape[-1]).T,
+                    gb.reshape(-1, gb.shape[-1]),
+                    preferred_element_type=jnp.float32)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_mm_bf16_reduce.defvjp(_mm_bf16_fwd, _mm_bf16_bwd)
+
+
+def dense_apply(p, x, *, precision=None, preferred=None):
+    """preferred: accumulation/partial-sum dtype.  For matmuls whose
+    contraction dim is TP-sharded, bf16 halves the all-reduce bytes (the
+    MXU still accumulates f32 internally; only the cross-shard combine is
+    reduced precision — Megatron's standard trade)."""
+    if preferred == jnp.bfloat16:
+        y = _mm_bf16_reduce(x, p["w"])
+        if "b" in p:
+            y = y + p["b"]
+        return y.astype(x.dtype)
+    y = jnp.matmul(x, p["w"], precision=precision,
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def reduce_dtype(rc) -> "jnp.dtype":
+    return jnp.bfloat16 if getattr(rc, "tp_reduce_dtype", "float32")         == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.bfloat16):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_axes(kind: str = "rmsnorm"):
+    ax = {"scale": ("embed",)}
+    if kind == "layernorm":
+        ax["bias"] = ("embed",)
+    return ax
+
+
+def norm_apply(p, x, *, kind: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap: Optional[float]):
+    """Grok-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def stack_init(rng, n: int, init_fn):
+    """Initialize ``n`` copies of a layer and stack each leaf on axis 0.
+
+    Used to build scan-over-groups parameter stacks; the stacked axis gets
+    logical name None (never sharded).
+    """
+    rngs = jax.random.split(rng, n)
+    ps = [init_fn(r) for r in rngs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *ps)
+
+
+def stack_axes(axes_tree):
+    """Prepend the (unsharded) stack axis to every logical-axes tuple."""
+    return jax.tree.map(
+        lambda ax: (None,) + tuple(ax),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)

@@ -1,0 +1,58 @@
+"""Dense MLP: SwiGLU (silu) or plain GeLU variants."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (activation, dense_apply, dense_axes,
+                                 dense_init, reduce_dtype)
+from repro.models.config import ModelConfig
+from repro.runconfig import RunConfig
+
+
+def init(rng, cfg: ModelConfig, d_ff=None, dtype=jnp.bfloat16):
+    f = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    if cfg.act == "silu":
+        kg, ku, kd = jax.random.split(rng, 3)
+        return {
+            "gate": dense_init(kg, d, f, bias=cfg.mlp_bias, dtype=dtype),
+            "up": dense_init(ku, d, f, bias=cfg.mlp_bias, dtype=dtype),
+            "down": dense_init(kd, f, d, bias=cfg.mlp_bias, dtype=dtype),
+        }
+    ku, kd = jax.random.split(rng)
+    return {
+        "up": dense_init(ku, d, f, bias=cfg.mlp_bias, dtype=dtype),
+        "down": dense_init(kd, f, d, bias=cfg.mlp_bias, dtype=dtype),
+    }
+
+
+def axes(cfg: ModelConfig):
+    b = cfg.mlp_bias
+    if cfg.act == "silu":
+        return {
+            "gate": dense_axes("ff_in", "ff", bias=b),
+            "up": dense_axes("ff_in", "ff", bias=b),
+            "down": dense_axes("ff", "o_out", bias=b),
+        }
+    return {
+        "up": dense_axes("ff_in", "ff", bias=b),
+        "down": dense_axes("ff", "o_out", bias=b),
+    }
+
+
+def apply(params, x, cfg: ModelConfig, rc: RunConfig):
+    prec = jax.lax.Precision(rc.matmul_precision) \
+        if rc.matmul_precision != "default" else None
+    act = activation(cfg.act)
+    red = reduce_dtype(rc)
+    if "gate" in params:
+        h = act(dense_apply(params["gate"], x, precision=prec,
+                            preferred=red)) \
+            * dense_apply(params["up"], x, precision=prec, preferred=red)
+    else:
+        h = act(dense_apply(params["up"], x, precision=prec, preferred=red))
+    # down-proj contracts the TP-sharded ff dim -> cross-shard partial sums
+    return dense_apply(params["down"], h, precision=prec,
+                       preferred=reduce_dtype(rc))

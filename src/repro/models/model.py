@@ -1,0 +1,138 @@
+"""Unified Model API over decoder-only LMs and the enc-dec (whisper) family.
+
+Everything downstream (train loop, serving engine, dry-run, SAPPHIRE's
+compiled evaluator) talks to this facade:
+
+    m = Model(cfg)
+    params            = m.init(rng)
+    ax                = m.param_axes()
+    loss, metrics     = m.loss(params, batch, rc)
+    logits, state     = m.prefill(params, inputs, s_max, rc)
+    logits, state     = m.decode_step(params, token, state, rc)
+    m.input_specs(shape_cell, mode)   # ShapeDtypeStruct stand-ins (no alloc)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer, whisper
+from repro.models.config import ModelConfig, ShapeCell
+from repro.runconfig import RunConfig
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._ed = cfg.is_encoder_decoder
+
+    # ---- parameters -------------------------------------------------------
+
+    def init(self, rng, dtype=jnp.bfloat16):
+        mod = whisper if self._ed else transformer
+        return mod.init(rng, self.cfg, dtype)
+
+    def param_axes(self):
+        mod = whisper if self._ed else transformer
+        return mod.axes(self.cfg)
+
+    def param_shapes(self, dtype=jnp.bfloat16):
+        """ShapeDtypeStructs for every parameter (no allocation)."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0), dtype))
+
+    # ---- training ---------------------------------------------------------
+
+    def loss(self, params, batch: Dict[str, jnp.ndarray], rc: RunConfig):
+        mod = whisper if self._ed else transformer
+        return mod.loss_fn(params, batch, self.cfg, rc)
+
+    # ---- serving ----------------------------------------------------------
+
+    def prefill(self, params, inputs: Dict[str, jnp.ndarray], s_max: int,
+                rc: RunConfig):
+        if self._ed:
+            # encode + teacher-forced full-sequence decoder pass, caches
+            # filled — the honest prefill computation for the 32k cell
+            return whisper.prefill(params, inputs["tokens"],
+                                   inputs["frames"], s_max, self.cfg, rc)
+        return transformer.prefill(params, inputs["tokens"], s_max,
+                                   self.cfg, rc)
+
+    def init_decode_state(self, inputs, batch: int, s_max: int, rc: RunConfig,
+                          params=None):
+        if self._ed:
+            return whisper.init_decode_state(params, inputs["frames"], batch,
+                                             s_max, self.cfg, rc)
+        return transformer.init_decode_state(batch, s_max, self.cfg, rc)
+
+    def decode_state_shapes(self, batch: int, s_max: int, rc: RunConfig):
+        """ShapeDtypeStructs for the decode state (no allocation)."""
+        cfg = self.cfg
+        if self._ed:
+            def mk():
+                params = self.init(jax.random.key(0))
+                frames = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+                return whisper.init_decode_state(params, frames, batch, s_max,
+                                                 cfg, RunConfig() if rc is None else rc)
+            return jax.eval_shape(mk)
+        return jax.eval_shape(
+            lambda: transformer.init_decode_state(batch, s_max, cfg, rc))
+
+    def decode_state_axes(self, rc: RunConfig):
+        if self._ed:
+            ax = attention_cache_axes_ed(rc)
+            return ax
+        return transformer.decode_state_axes(self.cfg, rc)
+
+    def decode_step(self, params, token, state, rc: RunConfig):
+        if self._ed:
+            return whisper.decode_step(params, token, state, self.cfg, rc)
+        return transformer.decode_step(params, token, state, self.cfg, rc)
+
+    # ---- input specs (dry-run stand-ins; weak-type-correct, no alloc) -----
+
+    def input_specs(self, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        if cell.mode == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if self._ed:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            if cfg.mrope_sections is not None:
+                # the vision-frontend stub supplies (t,h,w) position ids
+                specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+            return specs
+        if cell.mode == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if self._ed:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            return specs
+        if cell.mode == "decode":
+            # one new token against an S-long cache
+            specs = {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+            return specs
+        raise ValueError(cell.mode)
+
+
+def attention_cache_axes_ed(rc: RunConfig):
+    """Whisper decode-state logical axes."""
+    from repro.models import attention
+    ax, _ = attention.cache_axes(rc)
+    stacked = (None,) + tuple(ax)
+    return whisper.WhisperDecodeState(
+        self_k=stacked, self_v=stacked, cross_k=stacked, cross_v=stacked,
+        pos=())
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

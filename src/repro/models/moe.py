@@ -1,0 +1,192 @@
+"""Mixture-of-Experts MLP with shared experts and top-k routing.
+
+Covers grok-1 (8e top-2, gelu), qwen2-moe (60e top-4 + 4 shared, silu) and
+jamba (16e top-2).  Expert weights carry the "experts" logical axis so the
+layout knob can place them on the model mesh axis (expert parallelism).
+
+Two implementations (``moe_impl`` knob, C3-gated):
+
+* ``dense``    — einsum over *all* experts with routing weights masked to the
+  top-k.  No token dropping, deterministic, SPMD-friendly; compute scales
+  with n_experts (the faithful-but-expensive baseline; fine for dry-run
+  cost attribution since routed FLOPs are what the roofline counts).
+* ``dropping`` — capacity-factor dispatch (one-hot scatter into
+  [experts, capacity] buffers) — the classic Switch-style implementation
+  whose FLOPs scale with top-k only.  Capacity factor is a tuned knob.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mlp
+from repro.models.common import activation, dense_axes, dense_init, trunc_normal
+from repro.models.config import ModelConfig
+from repro.runconfig import RunConfig
+
+
+def _expert_ff(cfg: ModelConfig) -> int:
+    return cfg.moe_d_ff if cfg.moe_d_ff is not None else cfg.d_ff
+
+
+def init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    kr, ke, ks = jax.random.split(rng, 3)
+    d, f, e = cfg.d_model, _expert_ff(cfg), cfg.n_experts
+    n_mat = 3 if cfg.act == "silu" else 2
+    keys = jax.random.split(ke, n_mat)
+    p = {
+        "router": {"w": trunc_normal(kr, (d, e), 1.0, jnp.float32)},
+        "experts": {},
+    }
+    if cfg.act == "silu":
+        p["experts"] = {
+            "gate": trunc_normal(keys[0], (e, d, f), 1.0, dtype),
+            "up": trunc_normal(keys[1], (e, d, f), 1.0, dtype),
+            "down": trunc_normal(keys[2], (e, f, d), 1.0, dtype),
+        }
+    else:
+        p["experts"] = {
+            "up": trunc_normal(keys[0], (e, d, f), 1.0, dtype),
+            "down": trunc_normal(keys[1], (e, f, d), 1.0, dtype),
+        }
+    if cfg.n_shared_experts:
+        # Shared experts act as one dense MLP of width n_shared * f.
+        p["shared"] = mlp.init(ks, cfg, d_ff=cfg.n_shared_experts * f, dtype=dtype)
+    return p
+
+
+def axes(cfg: ModelConfig):
+    ax = {
+        "router": {"w": ("embed", "experts")},
+        "experts": {},
+    }
+    if cfg.act == "silu":
+        ax["experts"] = {
+            "gate": ("experts", "expert_in", "expert_ff"),
+            "up": ("experts", "expert_in", "expert_ff"),
+            "down": ("experts", "expert_ff", "expert_in"),
+        }
+    else:
+        ax["experts"] = {
+            "up": ("experts", "expert_in", "expert_ff"),
+            "down": ("experts", "expert_ff", "expert_in"),
+        }
+    if cfg.n_shared_experts:
+        ax["shared"] = mlp.axes(cfg)
+    return ax
+
+
+def _routing(params, x, cfg: ModelConfig):
+    """Return (weights [T, E] with only top-k nonzero, aux_loss scalar)."""
+    T = x.shape[0]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.n_experts_per_tok)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)      # renormalize
+    weights = jnp.zeros_like(probs)
+    weights = jnp.put_along_axis(weights, topi, topv, axis=-1, inplace=False)
+    # Switch-style load-balancing auxiliary loss.
+    frac_tokens = jnp.mean((weights > 0).astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(frac_tokens * frac_probs)
+    return weights, aux, topi, topv
+
+
+def _expert_hidden(ep, h, act_name: str):
+    """h [E, C, d] -> activated hidden z [E, C, f] (per-expert up/gate)."""
+    act = activation(act_name)
+    if "gate" in ep:
+        g = jnp.einsum("ecd,edf->ecf", h, ep["gate"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+        u = jnp.einsum("ecd,edf->ecf", h, ep["up"],
+                       preferred_element_type=jnp.float32).astype(h.dtype)
+        return act(g) * u
+    u = jnp.einsum("ecd,edf->ecf", h, ep["up"],
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    return act(u)
+
+
+def _expert_mlp(ep, h, act_name: str):
+    """h [E, C, d] through per-expert weights [E, d, f] / [E, f, d]."""
+    z = _expert_hidden(ep, h, act_name)
+    return jnp.einsum("ecf,efd->ecd", z, ep["down"],
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def apply(params, x, cfg: ModelConfig, rc: RunConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    weights, aux, topi, topv = _routing(params, xt, cfg)
+
+    if rc.moe_impl == "dense":
+        # All experts on all tokens, masked combine — WITHOUT materializing
+        # the [E, T, d] token broadcast (qwen2-moe: 60 experts x 15.7 GB
+        # per layer); the einsum broadcasts inside the dot for free.
+        ep = params["experts"]
+        act = activation(cfg.act)
+        if "gate" in ep:
+            g = jnp.einsum("td,edf->etf", xt, ep["gate"],
+                           preferred_element_type=jnp.float32).astype(xt.dtype)
+            u = jnp.einsum("td,edf->etf", xt, ep["up"],
+                           preferred_element_type=jnp.float32).astype(xt.dtype)
+            z = act(g) * u
+        else:
+            u = jnp.einsum("td,edf->etf", xt, ep["up"],
+                           preferred_element_type=jnp.float32).astype(xt.dtype)
+            z = act(u)
+        # Routing combine BEFORE the down-proj contraction: scaling z by
+        # the routing weights is local/elementwise, and the (e, f) joint
+        # contraction then emits ONE [T, d] partial sum per shard instead
+        # of per-expert [E, T, d] partials (8x the all-reduce bytes —
+        # measured 12.75 GiB/layer vs 0.8).  A 3-operand einsum does NOT
+        # guarantee this order (opt_einsum picked the bad one).
+        from repro.models.common import reduce_dtype
+        zs = z * weights.T[:, :, None].astype(z.dtype)        # [E, T, f]
+        y = jnp.einsum("etf,efd->td", zs, params["experts"]["down"],
+                       preferred_element_type=reduce_dtype(rc)
+                       ).astype(xt.dtype)
+    elif rc.moe_impl == "dropping":
+        y = _capacity_dispatch(params, xt, weights, topi, topv, cfg, rc)
+    else:
+        raise ValueError(rc.moe_impl)
+
+    if cfg.n_shared_experts:
+        y = y + mlp.apply(params["shared"], xt, cfg, rc)
+    return y.reshape(B, S, d), aux * cfg.router_aux_coef
+
+
+def _capacity_dispatch(params, xt, weights, topi, topv, cfg: ModelConfig,
+                       rc: RunConfig):
+    """Switch-style capacity-factor dispatch (token dropping)."""
+    T, d = xt.shape
+    E, K = cfg.n_experts, cfg.n_experts_per_tok
+    capacity = max(1, int(rc.moe_capacity_factor * T * K / E))
+    capacity = min(capacity, T)
+
+    # position of each (token, k) inside its expert's buffer
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)        # [T, K, E]
+    flat = onehot.reshape(T * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat           # [T*K, E]
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(T, K)
+    keep = pos < capacity                                     # [T, K]
+
+    # scatter tokens into [E, capacity, d]
+    eidx = topi.reshape(-1)                                   # [T*K]
+    cidx = jnp.where(keep.reshape(-1), pos.reshape(-1), capacity)  # drop->cap
+    buf = jnp.zeros((E, capacity + 1, d), xt.dtype)
+    tok = jnp.repeat(xt, K, axis=0)                           # [T*K, d]
+    buf = buf.at[eidx, cidx].add(tok)
+    buf = buf[:, :capacity]                                   # [E, C, d]
+
+    y_buf = _expert_mlp(params["experts"], buf, cfg.act)      # [E, C, d]
+
+    # gather back with routing weights
+    safe_c = jnp.minimum(cidx, capacity - 1)
+    gathered = y_buf[eidx, safe_c]                            # [T*K, d]
+    w = (topv.reshape(-1, 1) * keep.reshape(-1, 1)).astype(xt.dtype)
+    y = jnp.sum((gathered * w).reshape(T, K, d), axis=1)
+    return y

@@ -1,0 +1,58 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (multimodal rotary, arXiv:2409.12191) splits the head dim into three
+sections rotated by (temporal, height, width) position ids.  For the text
+backbone (vision frontend is a stub) the three ids coincide, which reduces
+to standard RoPE — but the section machinery is implemented and exercised so
+the VLM config is faithful.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2] (f32)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions [...,] -> angles [..., head_dim//2] (f32)."""
+    inv = rope_freqs(head_dim, theta)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
+    """Apply rotary embedding.
+
+    x         : [B, S, H, D] (D even)
+    positions : [B, S] int32 for RoPE, or [3, B, S] for M-RoPE (t/h/w ids).
+    """
+    d = x.shape[-1]
+    if mrope_sections is None:
+        ang = rope_angles(positions, d, theta)          # [B, S, D/2]
+    else:
+        if positions.ndim == 2:                          # text-only: t=h=w
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        ang_full = rope_angles(positions, d, theta)      # [3, B, S, D/2]
+        # Interleaved section split over frequency index (HF convention):
+        # freqs [0:s0) from t, [s0:s0+s1) from h, [s0+s1:) from w.
+        s0, s1, s2 = mrope_sections
+        assert (s0 + s1 + s2) == d // 2, "mrope sections must sum to head_dim/2"
+        parts, off = [], 0
+        for sec_i, sec in enumerate((s0, s1, s2)):
+            parts.append(ang_full[sec_i][..., off:off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)            # [B, S, D/2]
+
+    sin = jnp.sin(ang)[:, :, None, :]                    # [B, S, 1, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rotated.astype(x.dtype)

@@ -1,0 +1,230 @@
+"""Mamba block, TPU-adapted (chunked SSD form).
+
+HARDWARE ADAPTATION (DESIGN.md §8): Mamba-1's selective-scan CUDA kernel
+keeps a per-channel [d_inner, N] recurrent state in GPU shared memory and
+walks time sequentially per thread-block.  TPUs want matmul-shaped work on
+the MXU and chunk-bounded working sets in VMEM, so we implement the
+*chunked state-space dual* form (Mamba-2 / SSD, arXiv:2405.21060): per-head
+scalar decay, intra-chunk attention-like matmuls with a decay mask, and an
+inter-chunk carried state of shape [heads, N, P].  ``ssm_chunk`` (the chunk
+length) is a SAPPHIRE knob.  The sequential recurrence is kept as the
+reference oracle (``ssd_reference``) and for single-token decode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_apply, dense_axes, dense_init, norm_apply, norm_init, norm_axes, trunc_normal
+from repro.models.config import ModelConfig
+from repro.runconfig import RunConfig
+
+HEAD_P = 64          # per-head channel width (mamba-2 default)
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(d_inner, n_heads, state N)."""
+    di = cfg.d_inner
+    nh = max(1, di // HEAD_P)
+    return di, nh, cfg.ssm_state_dim
+
+
+def init(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    di, nh, N = dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(rng, 7)
+    return {
+        "in_proj": dense_init(k1, d, 2 * di, dtype=dtype),       # x, z
+        "conv_w": trunc_normal(k2, (cfg.ssm_conv_width, di), 1.0, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "bc_proj": dense_init(k3, di, 2 * N, dtype=dtype),       # B, C
+        "dt_proj": dense_init(k4, di, nh, bias=True, dtype=dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),                  # A = -exp(a_log)
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": norm_init(di, "rmsnorm", dtype),
+        "out_proj": dense_init(k5, di, d, dtype=dtype,
+                               scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def axes(cfg: ModelConfig):
+    return {
+        "in_proj": dense_axes("ssm_in", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "bc_proj": dense_axes("ssm_inner", None),
+        "dt_proj": dense_axes("ssm_inner", None, bias=True),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "out_norm": {"scale": ("ssm_inner",)},
+        "out_proj": dense_axes("ssm_inner", "o_out"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d.  x [B,S,di], w [W,di]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):   # W is tiny (4); unrolled adds, no conv primitive
+        out = out + xp[:, i: i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+class SsmState(NamedTuple):
+    s: jnp.ndarray        # [B, H, N, P] carried SSD state
+    conv: jnp.ndarray     # [B, W-1, di] conv tail
+
+
+def init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> SsmState:
+    di, nh, N = dims(cfg)
+    return SsmState(
+        s=jnp.zeros((batch, nh, N, di // nh), dtype),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, di), jnp.bfloat16),
+    )
+
+
+def state_axes(cfg: ModelConfig):
+    return SsmState(
+        s=("batch", None, "ssm_state", None),
+        conv=("batch", None, "ssm_inner"),
+    )
+
+
+def _project(params, u, cfg: ModelConfig):
+    """Shared front half: in_proj, conv, gates.  u [B,S,d]."""
+    di, nh, N = dims(cfg)
+    P = di // nh
+    xz = dense_apply(params["in_proj"], u)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z, di, nh, N, P
+
+
+def _post(params, y, z, cfg: ModelConfig):
+    y = norm_apply(params["out_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   kind="rmsnorm", eps=cfg.norm_eps)
+    return dense_apply(params["out_proj"], y)
+
+
+def _gates(params, xc, nh):
+    """dt (softplus) and per-head log-decay from conv'd activations."""
+    dt = jax.nn.softplus(dense_apply(params["dt_proj"], xc).astype(jnp.float32))  # [B,S,H]
+    a = -jnp.exp(params["a_log"])                                 # [H] negative
+    log_decay = dt * a[None, None, :]                             # [B,S,H] <= 0
+    return dt, log_decay
+
+
+def apply(params, u, cfg: ModelConfig, rc: RunConfig):
+    """Full-sequence chunked SSD.  u [B,S,d] -> [B,S,d]."""
+    B, S, _ = u.shape
+    x, z, di, nh, N, P = _project(params, u, cfg)
+    xc = jax.nn.silu(_causal_conv(x, params["conv_w"], params["conv_b"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    bc = dense_apply(params["bc_proj"], xc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                            # [B,S,N]
+    dt, log_decay = _gates(params, xc, nh)
+
+    xh = xc.reshape(B, S, nh, P)
+    # discretized input: dt-scaled
+    xin = xh * dt[..., None].astype(xh.dtype)
+
+    c = min(rc.ssm_chunk, S)
+    n_chunks = (S + c - 1) // c
+    assert S % c == 0, "ssm_chunk must divide seq len (padded by caller)"
+
+    def chunkify(t, shape):
+        return t.reshape((B, n_chunks, c) + shape)
+
+    xin_c = chunkify(xin, (nh, P)).transpose(1, 0, 2, 3, 4)       # [nc,B,c,H,P]
+    B_c = chunkify(Bm, (N,)).transpose(1, 0, 2, 3)                # [nc,B,c,N]
+    C_c = chunkify(Cm, (N,)).transpose(1, 0, 2, 3)
+    ld_c = chunkify(log_decay, (nh,)).transpose(1, 0, 2, 3)       # [nc,B,c,H]
+
+    def body(s_prev, xs):
+        xin_i, B_i, C_i, ld_i = xs
+        # cumulative log decay within chunk, inclusive: [B,c,H]
+        cum = jnp.cumsum(ld_i, axis=1)
+        # intra-chunk: scores[b,h,i,j] = exp(cum_i - cum_j) * (C_i . B_j), j<=i
+        diff = cum[:, :, None, :] - cum[:, None, :, :]            # [B,i,j,H]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)  # [B,i,j,H]
+        cb = jnp.einsum("bin,bjn->bij", C_i.astype(jnp.float32),
+                        B_i.astype(jnp.float32))                  # [B,i,j]
+        sc = cb[..., None] * L                                     # [B,i,j,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", sc, xin_i.astype(jnp.float32))
+        # inter-chunk: y += exp(cum_i) * C_i @ s_prev
+        y_inter = jnp.einsum("bin,bhnp->bihp", C_i.astype(jnp.float32), s_prev) \
+            * jnp.exp(cum)[..., None]
+        # state update: s = exp(total) * s_prev + sum_j exp(total - cum_j) B_j x_j
+        total = cum[:, -1:, :]                                     # [B,1,H]
+        w = jnp.exp(total - cum)                                   # [B,c,H]
+        s_new = s_prev * jnp.exp(total)[:, 0, :, None, None] + jnp.einsum(
+            "bjn,bjhp->bhnp", B_i.astype(jnp.float32),
+            (xin_i.astype(jnp.float32) * w[..., None]))
+        return s_new, (y_intra + y_inter)
+
+    s0 = jnp.zeros((B, nh, N, P), jnp.float32)
+    _, ys = jax.lax.scan(body, s0, (xin_c, B_c, C_c, ld_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, P)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.astype(u.dtype).reshape(B, S, di)
+    return _post(params, y, z, cfg)
+
+
+def ssd_reference(params, u, cfg: ModelConfig):
+    """Sequential-recurrence oracle (slow; tests only)."""
+    B, S, _ = u.shape
+    x, z, di, nh, N, P = _project(params, u, cfg)
+    xc = jax.nn.silu(_causal_conv(x, params["conv_w"], params["conv_b"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    bc = dense_apply(params["bc_proj"], xc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt, log_decay = _gates(params, xc, nh)
+    xh = (xc.reshape(B, S, nh, P) * dt[..., None].astype(xc.dtype)).astype(jnp.float32)
+
+    def step(s, t):
+        a = jnp.exp(log_decay[:, t])                               # [B,H]
+        s = s * a[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", Bm[:, t].astype(jnp.float32), xh[:, t])
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, t].astype(jnp.float32), s)
+        return s, y
+
+    s0 = jnp.zeros((B, nh, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    y = ys.transpose(1, 0, 2, 3)                                   # [B,S,H,P]
+    # D-skip, same convention as the chunked path (on the head view of xc)
+    y = y + xc.reshape(B, S, nh, P).astype(jnp.float32) \
+        * params["d_skip"][None, None, :, None]
+    y = y.astype(u.dtype).reshape(B, S, di)
+    return _post(params, y, z, cfg)
+
+
+def decode_step(params, u, state: SsmState, cfg: ModelConfig, rc: RunConfig):
+    """One-token decode.  u [B,1,d] -> (y [B,1,d], new_state)."""
+    B = u.shape[0]
+    x, z, di, nh, N, P = _project(params, u, cfg)
+    # conv over (tail ++ current)
+    W = cfg.ssm_conv_width
+    window = jnp.concatenate([state.conv.astype(x.dtype), x], axis=1)  # [B,W,di]
+    xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32)) \
+        + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)[:, None, :]              # [B,1,di]
+    new_conv = window[:, 1:, :].astype(jnp.bfloat16)
+
+    bc = dense_apply(params["bc_proj"], xc)
+    Bm, Cm = jnp.split(bc[:, 0], 2, axis=-1)                       # [B,N]
+    dt, log_decay = _gates(params, xc, nh)                         # [B,1,H]
+    a = jnp.exp(log_decay[:, 0])                                   # [B,H]
+    xh = xc.reshape(B, nh, P).astype(jnp.float32) * dt[:, 0, :, None]
+    s = state.s * a[:, :, None, None] + jnp.einsum("bn,bhp->bhnp",
+                                                   Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), s)
+    y = y + xc.reshape(B, nh, P).astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.astype(u.dtype).reshape(B, 1, di)
+    out = _post(params, y, z, cfg)
+    return out, SsmState(s=s, conv=new_conv)

@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    param_shardings,
+    shard_config_from_knobs,
+)

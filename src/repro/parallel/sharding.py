@@ -1,0 +1,330 @@
+"""Logical-axis sharding system.
+
+Every parameter / activation in the model zoo is annotated with *logical*
+axis names (``"embed"``, ``"ff"``, ``"heads"``, ``"batch"``, ``"seq"``,
+``"experts"``, ...).  An :class:`AxisRules` table maps logical names to mesh
+axis names.  The mapping itself is **part of the tunable configuration
+space** — SAPPHIRE's knobs select between FSDP/TP/EP/SP layouts by rewriting
+this table, the TPU analogue of Ceph's module-selector parameters
+(``osd_objectstore``): one knob decides the layout *module*, gating which
+sub-knobs take effect (DESIGN.md §5).
+
+Mesh axes (launch/mesh.py):
+  single-pod : ("data", "model")                       16 × 16 = 256 chips
+  multi-pod  : ("pod", "data", "model")            2 × 16 × 16 = 512 chips
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Mapping from logical axis names to mesh axes (None = replicate)."""
+
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+
+    def to_dict(self) -> Dict[str, MeshAxes]:
+        return dict(self.rules)
+
+    def with_rule(self, logical: str, mesh_axes: MeshAxes) -> "AxisRules":
+        d = self.to_dict()
+        d[logical] = mesh_axes
+        return AxisRules(tuple(d.items()))
+
+    def mesh_axes_for(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.to_dict().get(logical, None)
+
+
+# The "megatron + fsdp" default layout on the fixed (data, model) mesh.
+# "batch" covers the data-parallel axes (and "pod" when present — the caller
+# appends it, see `with_pod_axis`).
+DEFAULT_RULES = AxisRules(
+    (
+        ("batch", ("data",)),          # activation batch
+        ("seq", None),                 # sequence (SP off by default)
+        ("embed", None),               # d_model dim of activations
+        ("vocab", "model"),            # embedding table vocab dim
+        ("emb_embed", None),           # embedding table d_model dim
+        ("heads", "model"),            # attention heads (TP)
+        ("kv_heads", "model"),         # kv heads (TP; requires kv>=tp or repl)
+        ("head_dim", None),
+        ("qkv_in", "fsdp"),            # contraction dim of qkv proj (FSDP)
+        ("o_out", "fsdp"),             # output dim of o proj (FSDP)
+        ("ff", "model"),               # MLP hidden (TP)
+        ("ff_in", "fsdp"),             # MLP input dim (FSDP)
+        ("experts", "model"),          # MoE expert dim (EP over model axis)
+        ("expert_ff", "model"),        # fallback: TP inside experts — used
+                                       # when n_experts doesn't divide the
+                                       # model axis (grok: 8e on 16-way),
+                                       # where the guard replicates the
+                                       # expert dim and this one takes over
+        ("expert_in", "fsdp"),
+        ("kv_seq", None),              # KV-cache sequence dim
+        ("ssm_inner", "model"),        # mamba/xlstm inner width (TP)
+        ("ssm_in", "fsdp"),
+        ("ssm_state", None),
+        ("fsdp", None),                # placeholder resolved below
+    )
+)
+
+
+@dataclass(frozen=True)
+class ShardConfig:
+    """Resolved distribution layout — the output of the layout knobs."""
+
+    fsdp: bool = True                    # shard param "fsdp" dims over data axis
+    tensor_parallel: bool = True         # map "model"-tagged dims to mesh model
+    expert_parallel: bool = True         # shard experts over model axis
+    sequence_parallel: bool = False      # shard activation seq over model axis
+    shard_kv_seq_for_decode: bool = False  # flash-decode style KV seq sharding
+    pod_in_batch: bool = True            # multi-pod: pod axis joins batch
+    rules: AxisRules = DEFAULT_RULES
+
+    def resolve(self, mesh: Mesh) -> AxisRules:
+        """Produce final rules for a concrete mesh."""
+        axis_names = set(mesh.axis_names)
+        d = self.rules.to_dict()
+
+        # FSDP placeholder: "fsdp"-tagged dims shard over the data axis (and
+        # pod axis — ZeRO-3 across the full DP world) when fsdp is on.
+        fsdp_axes: MeshAxes = None
+        if self.fsdp:
+            fsdp_axes = ("pod", "data") if "pod" in axis_names else ("data",)
+        for k, v in list(d.items()):
+            if v == "fsdp" or v == ("fsdp",):
+                d[k] = fsdp_axes
+
+        # Batch axis: include pod for multi-pod DP.
+        if "pod" in axis_names and self.pod_in_batch:
+            d["batch"] = ("pod", "data")
+        else:
+            d["batch"] = ("data",)
+
+        if not self.tensor_parallel:
+            for k in ("heads", "kv_heads", "ff", "vocab", "ssm_inner"):
+                d[k] = None
+        if not self.expert_parallel:
+            d["experts"] = None
+        if self.sequence_parallel:
+            d["seq"] = ("model",)
+        if self.shard_kv_seq_for_decode:
+            d["kv_seq"] = ("data",)
+        d.pop("fsdp", None)
+        return AxisRules(tuple(d.items()))
+
+
+def shard_config_from_knobs(knobs: Dict[str, object]) -> ShardConfig:
+    """Translate SAPPHIRE layout knobs into a ShardConfig (module selection)."""
+    return ShardConfig(
+        fsdp=bool(knobs.get("fsdp_shard_params", True)),
+        tensor_parallel=bool(knobs.get("tensor_parallel", True)),
+        expert_parallel=bool(knobs.get("expert_parallel", True)),
+        sequence_parallel=bool(knobs.get("sequence_parallel", False)),
+        shard_kv_seq_for_decode=bool(knobs.get("shard_kv_seq", False)),
+        pod_in_batch=bool(knobs.get("pod_in_batch", True)),
+    )
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    rules: AxisRules,
+    mesh: Mesh,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Convert a tuple of logical axis names into a PartitionSpec.
+
+    Guards against (a) mesh axes the mesh doesn't have, (b) using the same
+    mesh axis twice in one spec (illegal), and — when ``shape`` is given —
+    (c) dims not divisible by their mesh-axis product.  The divisibility
+    check runs BEFORE an axis is marked used, so a non-divisible dim
+    releases its mesh axis to later dims (grok-1: 8 experts can't take the
+    16-way model axis, so expert_ff picks it up — TP inside experts).
+    """
+    axis_names = set(mesh.axis_names)
+    dims = list(shape) + [None] * len(logical_axes) if shape is not None \
+        else [None] * len(logical_axes)
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        mesh_axes = rules.mesh_axes_for(name)
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        ok = tuple(a for a in mesh_axes if a in axis_names and a not in used)
+        if not ok:
+            out.append(None)
+            continue
+        if dims[i] is not None:
+            size = 1
+            for a in ok:
+                size *= mesh.shape[a]
+            if size <= 1 or dims[i] % size != 0:
+                out.append(None)          # axis NOT consumed: stays free
+                continue
+        used.update(ok)
+        out.append(ok if len(ok) > 1 else ok[0])
+    # Trim trailing Nones (cosmetic; P() pads automatically).
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_tree(axes_tree, rules: AxisRules, mesh: Mesh):
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda ax: logical_to_spec(ax, rules, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def param_shardings(axes_tree, rules: AxisRules, mesh: Mesh):
+    """Pytree of NamedShardings for a pytree of logical-axes tuples."""
+    specs = spec_tree(axes_tree, rules, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def data_parallel_size(shard_cfg: "ShardConfig") -> int:
+    """Total DP world size implied by the ambient mesh (1 off-mesh)."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return 1
+    dp = mesh.shape.get("data", 1)
+    if "pod" in mesh.axis_names and shard_cfg.pod_in_batch:
+        dp *= mesh.shape["pod"]
+    return dp
+
+
+def _ambient_mesh() -> Optional[Mesh]:
+    """The mesh installed by ``with mesh:`` (None outside any mesh)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def shard_activation(x, logical_axes, shard_cfg: "ShardConfig"):
+    """``with_sharding_constraint`` on an activation, by logical axes.
+
+    Without this, XLA's SPMD partitioner may resolve the FSDP(weights-over-
+    data) vs DP(batch-over-data) axis conflict by *replicating the batch*
+    inside the layer scan — attention einsums then run dp-times redundant
+    (measured 16× on the 16×16 mesh).  Pinning the batch/seq sharding on
+    the layer inputs forces the all-gather onto the weights instead — the
+    ZeRO-3 schedule.  No-op outside a mesh context (CPU smoke tests).
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    rules = shard_cfg.resolve(mesh)
+    spec = logical_to_spec(logical_axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# logical axes that the FSDP placeholder resolves onto (weight shards that
+# must be re-gathered before compute)
+FSDP_TAGGED = ("qkv_in", "o_out", "ff_in", "expert_in", "ssm_in", "emb_embed")
+
+
+def gather_weights_for_compute(params, axes_tree, shard_cfg: "ShardConfig"):
+    """ZeRO-3 just-in-time weight all-gather, as a sharding constraint.
+
+    FSDP stores weights sharded over the data axis; naive SPMD then runs
+    the matmul with a *contraction-dim-sharded* weight, producing partial
+    sums and a per-matmul activation all-reduce (measured 229 GB/device
+    per step on yi-6b).  Re-pinning each weight leaf to "replicated over
+    data, still TP-sharded over model" right before use makes XLA insert a
+    small weight all-gather inside the layer loop instead — the ZeRO-3
+    schedule (weights stream in, activations never reduce over data).
+    No-op outside a mesh context or when FSDP is off.
+    """
+    mesh = _ambient_mesh()
+    if mesh is None or not shard_cfg.fsdp:
+        return params
+    rules = shard_cfg.resolve(mesh)
+    compute_rules = rules.to_dict()
+    for name in FSDP_TAGGED:
+        compute_rules[name] = None
+    compute_rules = AxisRules(tuple(compute_rules.items()))
+
+    p_leaves, p_def = jax.tree.flatten(params)
+    ax_leaves = jax.tree.flatten(
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))[0]
+    if len(p_leaves) != len(ax_leaves):
+        return params                     # structure drift: fail open
+    out = []
+    for leaf, ax in zip(p_leaves, ax_leaves):
+        axes = tuple(ax) + (None,) * (leaf.ndim - len(tuple(ax)))
+        spec = logical_to_spec(axes, compute_rules, mesh, leaf.shape)
+        out.append(jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec)))
+    return jax.tree.unflatten(p_def, out)
+
+
+def shardings_for(shapes_tree, axes_tree, rules: AxisRules, mesh: Mesh):
+    """NamedShardings with a per-dimension divisibility guard.
+
+    XLA SPMD wants evenly divisible dims for most ops; the full configs
+    guarantee it for the big dims, but odd ones (whisper's 6 heads or
+    51865 vocab, batch=1 long-context decode) must fall back to
+    replication on that dim instead of failing to lower.
+    """
+    def one(shape_leaf, ax):
+        shape = tuple(shape_leaf.shape)
+        axes = tuple(ax) + (None,) * (len(shape) - len(tuple(ax)))
+        return NamedSharding(mesh,
+                             logical_to_spec(axes, rules, mesh, shape))
+
+    # The axes tree mirrors the shapes tree but its leaves are *tuples*
+    # (pytree containers), so a joint tree.map can't see them — flatten
+    # both with their own leaf definitions and zip.
+    sh_leaves, sh_def = jax.tree.flatten(shapes_tree)
+    ax_leaves = jax.tree.flatten(
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))[0]
+    assert len(sh_leaves) == len(ax_leaves), \
+        f"shapes/axes mismatch: {len(sh_leaves)} vs {len(ax_leaves)}"
+    return jax.tree.unflatten(sh_def, [one(s, a) for s, a
+                                       in zip(sh_leaves, ax_leaves)])
+
+
+def divisible_or_replicate(
+    dim_size: int, logical: str, rules: AxisRules, mesh: Mesh
+) -> MeshAxes:
+    """Check a dim is divisible by its mesh-axis product, else replicate.
+
+    XLA SPMD requires even divisibility for many ops; our configs guarantee
+    it for the assigned architectures, but reduced smoke configs may not —
+    this helper keeps them runnable.
+    """
+    mesh_axes = rules.mesh_axes_for(logical)
+    if mesh_axes is None:
+        return None
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape[a]
+    return mesh_axes if dim_size % size == 0 else None

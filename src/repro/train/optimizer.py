@@ -1,0 +1,217 @@
+"""Optimizers from scratch: AdamW (f32 master weights) and Adafactor.
+
+The optimizer choice, betas, weight decay, clipping and master-weight
+policy are all SAPPHIRE knobs (C3: ``optimizer`` gates ``beta1/beta2``).
+State layout is a pytree mirroring the parameters so the same logical-axis
+sharding rules apply (FSDP shards optimizer state with the parameters —
+ZeRO semantics fall out of the axis rules for free).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runconfig import RunConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any          # f32 master copy (or None-like empty when disabled)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any              # row second-moment factors
+    vc: Any              # col second-moment factors
+    v: Any               # full second moment for <2D params
+    master: Any
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def linear_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return jnp.where(step < warmup, warm, base_lr * (1 - prog))
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, rc: RunConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    master = _f32(params) if rc.master_weights_f32 else \
+        jax.tree.map(lambda x: jnp.zeros((0,), jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.zeros_like, zeros), master)
+
+
+def adamw_update(grads, state: AdamWState, params, rc: RunConfig,
+                 lr: jnp.ndarray):
+    b1, b2, eps, wd = rc.beta1, rc.beta2, 1e-8, rc.weight_decay
+    step = state.step + 1
+    g32, _ = clip_by_global_norm(grads, rc.grad_clip_norm)
+    m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi, state.m, g32)
+    v = jax.tree.map(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, state.v, g32)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    base = state.master if rc.master_weights_f32 else _f32(params)
+    new_master = jax.tree.map(
+        lambda p, mi, vi: p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        - lr * wd * p,
+        base, m, v)
+    new_params = jax.tree.map(lambda p, nm: nm.astype(p.dtype),
+                              params, new_master)
+    keep_master = new_master if rc.master_weights_f32 else state.master
+    return new_params, AdamWState(step, m, v, keep_master)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments — 1/3 the optimizer HBM of AdamW)
+# ---------------------------------------------------------------------------
+
+def _factored(x) -> bool:
+    return x.ndim >= 2
+
+
+def adafactor_init(params, rc: RunConfig) -> AdafactorState:
+    def rows(x):
+        return (jnp.zeros(x.shape[:-1], jnp.float32) if _factored(x)
+                else jnp.zeros((0,), jnp.float32))
+
+    def cols(x):
+        return (jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)
+                if _factored(x) else jnp.zeros((0,), jnp.float32))
+
+    def full(x):
+        return (jnp.zeros((0,), jnp.float32) if _factored(x)
+                else jnp.zeros_like(x, jnp.float32))
+
+    master = _f32(params) if rc.master_weights_f32 else \
+        jax.tree.map(lambda x: jnp.zeros((0,), jnp.float32), params)
+    return AdafactorState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(rows, params),
+                          jax.tree.map(cols, params),
+                          jax.tree.map(full, params), master)
+
+
+def adafactor_update(grads, state: AdafactorState, params, rc: RunConfig,
+                     lr: jnp.ndarray):
+    step = state.step + 1
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    eps = 1e-30
+    g32, _ = clip_by_global_norm(grads, rc.grad_clip_norm)
+
+    def upd(g, vr, vc, v, p_master):
+        if _factored(g):
+            g2 = g * g + eps
+            vr_new = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc_new = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(vr_new, axis=-1, keepdims=True)
+            pre = (vr_new / jnp.maximum(row_mean, eps))[..., None] \
+                * vc_new[..., None, :]
+            upd_ = g / jnp.sqrt(jnp.maximum(pre, eps))
+            v_new = v
+        else:
+            v_new = decay * v + (1 - decay) * (g * g)
+            upd_ = g / jnp.sqrt(v_new + 1e-12)
+            vr_new, vc_new = vr, vc
+        # relative step size (Adafactor's update clipping)
+        d = jnp.sqrt(jnp.mean(jnp.square(upd_)) + eps)
+        upd_ = upd_ / jnp.maximum(1.0, d)
+        new_p = p_master - lr * upd_ - lr * rc.weight_decay * p_master
+        return new_p, vr_new, vc_new, v_new
+
+    base = state.master if rc.master_weights_f32 else _f32(params)
+    out = jax.tree.map(upd, g32, state.vr, state.vc, state.v, base)
+    treedef = jax.tree.structure(params)
+    leaves = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    vr = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    vc = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    v = jax.tree.unflatten(treedef, [l[3] for l in leaves])
+    new_params = jax.tree.map(lambda p, nm: nm.astype(p.dtype),
+                              params, new_master)
+    keep_master = new_master if rc.master_weights_f32 else state.master
+    return new_params, AdafactorState(step, vr, vc, v, keep_master)
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+def opt_init(params, rc: RunConfig):
+    if rc.optimizer == "adamw":
+        return adamw_init(params, rc)
+    if rc.optimizer == "adafactor":
+        return adafactor_init(params, rc)
+    raise ValueError(rc.optimizer)
+
+
+def opt_update(grads, state, params, rc: RunConfig, lr):
+    if rc.optimizer == "adamw":
+        return adamw_update(grads, state, params, rc, lr)
+    return adafactor_update(grads, state, params, rc, lr)
+
+
+def opt_state_axes(param_axes, rc: RunConfig):
+    """Logical axes for the optimizer state (mirrors parameter axes)."""
+    if rc.optimizer == "adamw":
+        master = param_axes if rc.master_weights_f32 else \
+            jax.tree.map(lambda _: (None,), param_axes,
+                         is_leaf=_is_axes_leaf)
+        return AdamWState(step=(), m=param_axes, v=param_axes, master=master)
+    rows = jax.tree.map(lambda ax: tuple(ax[:-1]), param_axes,
+                        is_leaf=_is_axes_leaf)
+    cols = jax.tree.map(lambda ax: tuple(ax[:-2]) + tuple(ax[-1:])
+                        if len(ax) >= 2 else (None,),
+                        param_axes, is_leaf=_is_axes_leaf)
+    master = param_axes if rc.master_weights_f32 else \
+        jax.tree.map(lambda _: (None,), param_axes, is_leaf=_is_axes_leaf)
+    return AdafactorState(step=(), vr=rows, vc=cols,
+                          v=jax.tree.map(lambda _: (None,), param_axes,
+                                         is_leaf=_is_axes_leaf),
+                          master=master)
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)

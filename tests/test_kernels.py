@@ -1,0 +1,146 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import reference_attention
+from repro.kernels.gp_gram.ops import matern52_cross, matern52_gram
+from repro.kernels.gp_gram.ref import matern52_cross_ref, matern52_gram_ref
+from repro.kernels.mlstm_chunk.ops import mlstm_chunk
+from repro.kernels.mlstm_chunk.ref import mlstm_sequential
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+FLASH_CASES = [
+    # (B, Sq, Sk, H, Kh, D, causal, window, softcap, bq, bk)
+    (2, 256, 256, 4, 2, 64, True, None, None, 128, 128),
+    (1, 128, 384, 8, 8, 128, True, None, 30.0, 128, 128),
+    (2, 200, 200, 4, 1, 64, True, 64, None, 128, 128),
+    (1, 512, 512, 2, 2, 128, False, None, None, 256, 128),
+    (1, 96, 96, 6, 6, 64, True, None, None, 128, 128),     # whisper-ish
+    (2, 64, 64, 4, 4, 32, True, 16, 10.0, 64, 64),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=lambda c: f"B{c[0]}S{c[1]}x{c[2]}H{c[3]}-{c[4]}D{c[5]}")
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(case, dtype):
+    B, Sq, Sk, H, Kh, D, causal, window, softcap, bq, bk = case
+    k1, k2, k3 = jax.random.split(jax.random.key(Sq + H), 3)
+    q = _rand(k1, (B, Sq, H, D), dtype)
+    k = _rand(k2, (B, Sk, Kh, D), dtype)
+    v = _rand(k3, (B, Sk, Kh, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=bq, block_k=bk)
+    ref = reference_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_block_size_invariance():
+    """Output must not depend on the (tuned) block sizes."""
+    k1, k2, k3 = jax.random.split(jax.random.key(7), 3)
+    q = _rand(k1, (1, 256, 4, 64), jnp.float32)
+    k = _rand(k2, (1, 256, 2, 64), jnp.float32)
+    v = _rand(k3, (1, 256, 2, 64), jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(64, 64), (128, 256), (256, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5)
+
+
+MLSTM_CASES = [
+    (2, 128, 2, 32, 32), (1, 256, 4, 64, 64), (2, 64, 1, 16, 16),
+    (1, 512, 2, 32, 128), (1, 128, 2, 32, 128),
+]
+
+
+@pytest.mark.parametrize("case", MLSTM_CASES,
+                         ids=lambda c: f"B{c[0]}S{c[1]}H{c[2]}P{c[3]}C{c[4]}")
+def test_mlstm_chunk_matches_sequential(case):
+    B, S, H, P, chunk = case
+    ks = jax.random.split(jax.random.key(S * H + P), 5)
+    q = _rand(ks[0], (B, S, H, P), jnp.float32) * 0.5
+    k = _rand(ks[1], (B, S, H, P), jnp.float32) * 0.5 / (P ** 0.5)
+    v = _rand(ks[2], (B, S, H, P), jnp.float32) * 0.5
+    logi = jax.random.normal(ks[3], (B, S, H), jnp.float32)
+    logf = -jax.nn.softplus(-jax.random.normal(ks[4], (B, S, H)) * 2.0)
+    out = mlstm_chunk(q, k, v, logi, logf, chunk=chunk)
+    ref = mlstm_sequential(q, k, v, logi, logf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+def test_mlstm_chunk_size_invariance():
+    B, S, H, P = 1, 256, 2, 32
+    ks = jax.random.split(jax.random.key(11), 5)
+    q = _rand(ks[0], (B, S, H, P), jnp.float32)
+    k = _rand(ks[1], (B, S, H, P), jnp.float32) / (P ** 0.5)
+    v = _rand(ks[2], (B, S, H, P), jnp.float32)
+    logi = jax.random.normal(ks[3], (B, S, H))
+    logf = -jax.nn.softplus(-jax.random.normal(ks[4], (B, S, H)))
+    outs = [mlstm_chunk(q, k, v, logi, logf, chunk=c) for c in (32, 64, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-4)   # f32 reassociation across chunk sizes
+
+
+def test_mlstm_kernel_matches_model_path():
+    """Kernel numerics == the model's jnp chunked scan (models/xlstm.py)."""
+    from repro.configs import get_smoke_config
+    from repro.models import xlstm
+    from repro.runconfig import RunConfig
+    cfg = get_smoke_config("xlstm-1.3b")
+    rc = RunConfig(mlstm_chunk=16)
+    p = xlstm.mlstm_init(jax.random.key(0), cfg, jnp.float32)
+    u = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model), jnp.float32)
+    ref_out = xlstm.mlstm_apply(p, u, cfg, rc)          # jnp chunked path
+    q, k, v, logi, logf, z = xlstm._mlstm_qkvg(p, u, cfg)
+    h = mlstm_chunk(q, k, v, logi, logf, chunk=16)
+    di, nh, P = xlstm.mlstm_dims(cfg)
+    from repro.models.common import dense_apply, norm_apply
+    hh = h.reshape(2, 64, di)
+    hh = norm_apply(p["out_norm"],
+                    hh.astype(u.dtype)
+                    * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                    kind="rmsnorm", eps=cfg.norm_eps)
+    out = dense_apply(p["down"], hh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=5e-4)
+
+
+GRAM_CASES = [(40, 17, 5), (130, 200, 16), (8, 8, 2), (300, 1, 24),
+              (128, 128, 8)]
+
+
+@pytest.mark.parametrize("case", GRAM_CASES,
+                         ids=lambda c: f"n{c[0]}m{c[1]}d{c[2]}")
+def test_gp_gram_matches_reference(case):
+    n, m, d = case
+    ka, kb, kl = jax.random.split(jax.random.key(n + m), 3)
+    xa = jax.random.uniform(ka, (n, d))
+    xb = jax.random.uniform(kb, (m, d))
+    ls = jax.random.uniform(kl, (d,), minval=0.1, maxval=1.0)
+    np.testing.assert_allclose(
+        np.asarray(matern52_gram(xa, ls, 1.7)),
+        np.asarray(matern52_gram_ref(xa, ls, 1.7)), atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(matern52_cross(xa, xb, ls, 0.9)),
+        np.asarray(matern52_cross_ref(xa, xb, ls, 0.9)), atol=2e-4)
+
+
+def test_gp_gram_psd():
+    """Property: Gram + jitter is positive definite (Cholesky succeeds)."""
+    x = jax.random.uniform(jax.random.key(5), (64, 6))
+    g = matern52_gram(x, jnp.full((6,), 0.3), 1.0)
+    chol = np.linalg.cholesky(np.asarray(g) + 1e-5 * np.eye(64))
+    assert np.all(np.isfinite(chol))

@@ -1,0 +1,207 @@
+"""ML core (§3.3 Lasso, §3.4 GP-BO): correctness + noise-robustness."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bo, gp, optimizers as opt, ranking
+from repro.core.lasso import (lasso_fit, lasso_path, path_importance,
+                              ridge_fit)
+from repro.core.space import Knob, Space
+
+
+# ---------------------------------------------------------------------------
+# Lasso
+# ---------------------------------------------------------------------------
+
+def _sparse_problem(n=200, d=30, k=4, noise=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    beta = np.zeros(d)
+    beta[:k] = np.array([3.0, -2.0, 1.5, 1.0])[:k]
+    y = x @ beta + rng.normal(0, noise, n)
+    return x, y, beta
+
+
+class TestLasso:
+    def test_recovers_support(self):
+        x, y, beta = _sparse_problem()
+        coef = lasso_fit(x, y, lam=0.05)
+        picked = set(np.where(np.abs(coef) > 1e-3)[0])
+        assert set(range(4)) <= picked
+        assert len(picked) <= 10
+
+    def test_l1_zeroes_ridge_does_not(self):
+        """The paper's argument: L1 selects, L2 only shrinks."""
+        x, y, _ = _sparse_problem()
+        lcoef = lasso_fit(x, y, lam=0.1)
+        rcoef = ridge_fit(x, y, lam=0.1)
+        assert np.sum(np.abs(lcoef) < 1e-4) > 10
+        assert np.sum(np.abs(rcoef) < 1e-4) == 0
+
+    def test_path_monotone_support(self):
+        x, y, _ = _sparse_problem()
+        lams, betas = lasso_path(x, y, n_lambdas=20)
+        nnz = (np.abs(betas) > 1e-6).sum(axis=1)
+        assert nnz[0] <= 1 and nnz[-1] >= 4        # grows along the path
+
+    def test_path_importance_ranks_true_features_first(self):
+        x, y, _ = _sparse_problem()
+        lams, betas = lasso_path(x, y)
+        imp = path_importance(lams, betas)
+        assert set(np.argsort(-imp)[:4]) == {0, 1, 2, 3}
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_lambda_max_gives_zero(self, seed):
+        """Property: at λ ≥ λ_max the solution is exactly 0."""
+        x, y, _ = _sparse_problem(n=60, d=10, seed=seed)
+        from repro.core.lasso import lambda_max, standardize
+        lmax = lambda_max(standardize(x, y))
+        coef = lasso_fit(x, y, lam=lmax * 1.01)
+        assert np.allclose(coef, 0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# GP
+# ---------------------------------------------------------------------------
+
+class TestGP:
+    def test_interpolates_clean_data(self):
+        rng = np.random.default_rng(0)
+        x = rng.random((40, 2)).astype(np.float32)
+        y = np.sin(3 * x[:, 0]) + x[:, 1]
+        st_ = gp.fit(x, y, steps=150)
+        mu, sd = gp.predict(st_, x[:10])
+        assert float(np.sqrt(np.mean((np.asarray(mu) - y[:10]) ** 2))) < 0.05
+
+    def test_denoises(self):
+        """The §3.4 claim: GP approximates through noise-corrupted data."""
+        rng = np.random.default_rng(1)
+        x = rng.random((80, 2)).astype(np.float32)
+        f = np.sin(3 * x[:, 0]) + x[:, 1]
+        y = f + rng.normal(0, 0.1, 80)
+        st_ = gp.fit(x, y, steps=200)
+        mu, _ = gp.predict(st_, x)
+        rmse = float(np.sqrt(np.mean((np.asarray(mu) - f) ** 2)))
+        assert rmse < 0.06                 # well below the 0.1 noise floor
+
+    def test_padding_invariance(self):
+        rng = np.random.default_rng(2)
+        x = rng.random((37, 3)).astype(np.float32)   # odd n -> pads to 48
+        y = x.sum(axis=1)
+        mu_p, _ = gp.predict(gp.fit(x, y, steps=100, pad=True), x[:5])
+        mu_n, _ = gp.predict(gp.fit(x, y, steps=100, pad=False), x[:5])
+        assert np.allclose(np.asarray(mu_p), np.asarray(mu_n), atol=2e-2)
+
+    def test_uncertainty_grows_off_data(self):
+        rng = np.random.default_rng(3)
+        x = (rng.random((30, 2)) * 0.4).astype(np.float32)   # corner cluster
+        y = x.sum(axis=1)
+        st_ = gp.fit(x, y, steps=100)
+        _, sd_near = gp.predict(st_, x[:5])
+        _, sd_far = gp.predict(st_, np.full((5, 2), 0.95, np.float32))
+        assert float(np.mean(sd_far)) > 2 * float(np.mean(sd_near))
+
+
+# ---------------------------------------------------------------------------
+# BO + baselines
+# ---------------------------------------------------------------------------
+
+def _space2d():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+
+
+class TestBO:
+    def test_converges_noisy_quadratic(self):
+        rng = np.random.default_rng(0)
+        f = lambda c: (c["x"] - 0.7) ** 2 + (c["y"] - 0.2) ** 2 \
+            + rng.normal(0, 0.005)
+        best, _, trace, _ = bo.minimize(
+            f, _space2d(), bo.BOConfig(n_init=6, n_iter=20,
+                                       n_candidates=256, fit_steps=60))
+        assert abs(best["x"] - 0.7) < 0.15 and abs(best["y"] - 0.2) < 0.15
+
+    def test_best_values_monotone(self):
+        f = lambda c: (c["x"] - 0.3) ** 2
+        _, _, trace, _ = bo.minimize(
+            f, _space2d(), bo.BOConfig(n_init=4, n_iter=8,
+                                       n_candidates=128, fit_steps=40))
+        bv = trace.best_values
+        assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(bv, bv[1:]))
+
+    def test_dynamic_boundary_escapes_static_box(self):
+        """Paper Fig. 4: optimum OUTSIDE the initial box is reachable only
+        with dynamic boundaries."""
+        sp = Space((Knob("x", "float", 4.0, lo=1.0, hi=8.0, log_scale=True,
+                         dynamic_bound=True),))
+        f = lambda c: (c["x"] - 20.0) ** 2          # optimum at 20 > hi=8
+        cfg = bo.BOConfig(n_init=4, n_iter=16, n_candidates=128,
+                          fit_steps=40, boundary_factor=3.0)
+        best_d, vd, tr, sp_final = bo.minimize(f, sp, cfg)
+        assert sp_final.knob("x").hi > 8.0          # boundary grew
+        assert tr.boundary_events                   # events recorded
+        cfg_static = bo.BOConfig(n_init=4, n_iter=16, n_candidates=128,
+                                 fit_steps=40, dynamic_boundary=False)
+        best_s, vs, _, _ = bo.minimize(f, sp, cfg_static)
+        assert best_d["x"] > best_s["x"]            # got closer to 20
+        assert vd < vs
+
+    def test_baseline_optimizers_run(self):
+        f = lambda c: (c["x"] - 0.3) ** 2 + 0.5 * abs(c["y"] - 0.6)
+        for fn in (opt.random_search,):
+            best, v, tr = fn(f, _space2d(), budget=16)
+            assert len(tr.values) == 16
+        best, v, tr = opt.simulated_annealing(f, _space2d(), budget=16)
+        assert len(tr.values) == 16
+        best, v, tr = opt.genetic_algorithm(f, _space2d(), budget=16)
+        assert len(tr.values) >= 16
+
+
+# ---------------------------------------------------------------------------
+# ranking pipeline (§3.3 end-to-end on a synthetic ground truth)
+# ---------------------------------------------------------------------------
+
+def test_ranking_finds_influential_knobs():
+    knobs = tuple(
+        [Knob(f"real{i}", "float", 0.5, lo=0.0, hi=1.0) for i in range(3)]
+        + [Knob(f"inert{i}", "float", 0.5, lo=0.0, hi=1.0, inert=True)
+           for i in range(20)]
+        + [Knob("cat", "categorical", "a", choices=("a", "b", "c"))]
+    )
+    sp = Space(knobs)
+    rng = np.random.default_rng(0)
+
+    def f(c):
+        # monotone effects: Lasso is linear — a symmetric |x-0.5| bump is
+        # invisible to it by design (zero linear correlation)
+        base = (3.0 * c["real0"] + 2.0 * c["real1"] ** 2
+                + 1.0 * c["real2"] + (0.8 if c["cat"] == "b" else 0.0))
+        return float(np.exp(base / 3) + rng.normal(0, 0.02))
+
+    rk = ranking.rank(sp, f, n_samples=200, seed=0)
+    top4 = set(rk.top(4))
+    assert {"real0", "real1", "real2"} <= set(rk.top(6))
+    assert "cat" in set(rk.top(8))
+    rows = rk.table(4)
+    assert rows[0]["importance"] >= rows[-1]["importance"]
+
+
+def test_stability_selection_reduces_false_positives():
+    knobs = tuple(
+        [Knob("real", "float", 0.5, lo=0.0, hi=1.0)]
+        + [Knob(f"inert{i}", "float", 0.5, lo=0.0, hi=1.0, inert=True)
+           for i in range(40)])
+    sp = Space(knobs)
+    rng = np.random.default_rng(1)
+    f = lambda c: 2.0 * c["real"] + rng.normal(0, 0.3)
+    plain = ranking.rank(sp, f, n_samples=150, seed=2)
+    rng = np.random.default_rng(1)
+    stable = ranking.rank(sp, f, n_samples=150, seed=2, stability_rounds=8)
+    assert stable.top(1) == ["real"]
+    # stability-selected importances concentrate more mass on the signal
+    def mass(rk):
+        imp = rk.importance / (rk.importance.sum() + 1e-12)
+        return imp[list(rk.space.names).index("real")]
+    assert mass(stable) >= mass(plain)

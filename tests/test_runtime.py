@@ -1,0 +1,333 @@
+"""Runtime substrate: train loop equivalences, checkpoint, data, elastic,
+serving engine, cost model, evaluators."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.costmodel import (MULTI_POD, SINGLE_POD, estimate,
+                                  mxu_block_efficiency, V5E)
+from repro.core.evaluators import AnalyticEvaluator
+from repro.core import knobs as km
+from repro.models.config import SHAPES_BY_NAME
+from repro.models.model import Model
+from repro.runconfig import RunConfig
+from repro.serve.engine import Engine
+from repro.serve.kvcache import CachePlan
+from repro.train import elastic
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import batch_at
+from repro.train.train_loop import init_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# train loop
+# ---------------------------------------------------------------------------
+
+class TestTrainLoop:
+    def test_microbatch_equivalence(self):
+        """Grad accumulation must match single-shot (same trajectory)."""
+        cfg = get_smoke_config("yi-6b")
+        m = Model(cfg)
+        lr = lambda s: 1e-3
+        results = {}
+        for mb in (0, 2):
+            rc = RunConfig(microbatch=mb)
+            state = init_state(m, jax.random.key(0), rc)
+            step = jax.jit(make_train_step(m, rc, lr_schedule=lr))
+            for i in range(3):
+                b = batch_at(0, i, global_batch=8, seq_len=32,
+                             vocab_size=cfg.vocab_size)
+                state, mets = step(state, b)
+            results[mb] = float(mets["loss"])
+        assert abs(results[0] - results[2]) < 0.05
+
+    def test_unrolled_matches_scan(self):
+        cfg = get_smoke_config("qwen1.5-4b")
+        m = Model(cfg)
+        lr = lambda s: 1e-3
+        out = {}
+        for unroll in (False, True):
+            rc = RunConfig(microbatch=2, grad_accum_unroll=unroll)
+            state = init_state(m, jax.random.key(0), rc)
+            step = jax.jit(make_train_step(m, rc, lr_schedule=lr))
+            b = batch_at(0, 0, global_batch=4, seq_len=16,
+                         vocab_size=cfg.vocab_size)
+            state, mets = step(state, b)
+            out[unroll] = float(mets["loss"])
+        assert abs(out[False] - out[True]) < 1e-3
+
+    def test_loss_decreases(self):
+        cfg = get_smoke_config("yi-6b")
+        m = Model(cfg)
+        rc = RunConfig()
+        state = init_state(m, jax.random.key(0), rc)
+        step = jax.jit(make_train_step(m, rc, lr_schedule=lambda s: 3e-3))
+        losses = []
+        for i in range(20):
+            b = batch_at(0, i, global_batch=8, seq_len=64,
+                         vocab_size=cfg.vocab_size)
+            state, mets = step(state, b)
+            losses.append(float(mets["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def test_roundtrip_bf16(self):
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d)
+            tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                    "b": {"c": jnp.full((4,), 1.5, jnp.bfloat16)}}
+            cm.save(3, tree)
+            restored, step = cm.restore(tree)
+            assert step == 3
+            np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                          np.asarray(tree["a"]))
+            assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_retention_and_latest(self):
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d, keep_last=2)
+            t = {"x": jnp.zeros(2)}
+            for s in (1, 2, 3, 4):
+                cm.save(s, t)
+            assert cm.steps() == [3, 4]
+            assert cm.latest_step() == 4
+
+    def test_async_save(self):
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d)
+            cm.save(1, {"x": jnp.ones(8)}, blocking=False)
+            cm.wait()
+            assert cm.latest_step() == 1
+
+    def test_shape_mismatch_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d)
+            cm.save(1, {"x": jnp.ones((2, 2))})
+            with pytest.raises(ValueError):
+                cm.restore({"x": jnp.ones((3, 3))})
+
+    def test_resume_reproduces_trajectory(self):
+        """Train 6 = train 3 + restore + train 3 (fault tolerance)."""
+        cfg = get_smoke_config("qwen1.5-4b")
+        m = Model(cfg)
+        rc = RunConfig()
+        step = jax.jit(make_train_step(m, rc, lr_schedule=lambda s: 1e-3))
+
+        def run(state, lo, hi):
+            for i in range(lo, hi):
+                b = batch_at(0, i, global_batch=4, seq_len=16,
+                             vocab_size=cfg.vocab_size)
+                state, mets = step(state, b)
+            return state, float(mets["loss"])
+
+        s0 = init_state(m, jax.random.key(0), rc)
+        _, loss_straight = run(s0, 0, 6)
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d)
+            s1, _ = run(init_state(m, jax.random.key(0), rc), 0, 3)
+            cm.save(3, s1)
+            s2, step_r = cm.restore(init_state(m, jax.random.key(0), rc))
+            _, loss_resumed = run(s2, step_r, 6)
+        assert abs(loss_straight - loss_resumed) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_stateless_determinism(self):
+        a = batch_at(0, 17, global_batch=4, seq_len=32, vocab_size=100)
+        b = batch_at(0, 17, global_batch=4, seq_len=32, vocab_size=100)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        b = batch_at(1, 0, global_batch=2, seq_len=16, vocab_size=50)
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["labels"][:, :-1]))
+
+    def test_steps_differ(self):
+        a = batch_at(0, 1, global_batch=2, seq_len=16, vocab_size=100)
+        b = batch_at(0, 2, global_batch=2, seq_len=16, vocab_size=100)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000), st.integers(0, 1000))
+    def test_host_shards_partition(self, seed, step):
+        """Property: per-host shards are disjoint slices of the global."""
+        full = batch_at(seed, step, global_batch=4, seq_len=8,
+                        vocab_size=64, host_index=0, host_count=1)
+        parts = [batch_at(seed, step, global_batch=4, seq_len=8,
+                          vocab_size=64, host_index=h, host_count=2)
+                 for h in (0, 1)]
+        assert parts[0]["tokens"].shape == (2, 8)
+        # different hosts draw different data
+        assert not np.array_equal(np.asarray(parts[0]["tokens"]),
+                                  np.asarray(parts[1]["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# elastic runtime
+# ---------------------------------------------------------------------------
+
+class TestElastic:
+    def test_watchdog_flags_persistent_straggler(self):
+        w = elastic.StepWatchdog(patience=2)
+        for t in range(12):
+            for h in range(4):
+                w.observe(h, 1.0 + (3.0 if (h == 2 and t > 7) else 0.0))
+            health = w.classify()
+        assert health[2] == elastic.STRAGGLER
+        assert health[0] == elastic.HEALTHY
+
+    def test_watchdog_ignores_transient(self):
+        w = elastic.StepWatchdog(patience=3)
+        for t in range(10):
+            for h in range(4):
+                w.observe(h, 4.0 if (h == 1 and t == 5) else 1.0)
+            health = w.classify()
+        assert health[1] == elastic.HEALTHY
+
+    def test_recarve_keeps_model_axis(self):
+        c = elastic.Carve(2, 16, 16)
+        new = elastic.recarve(c.chips - 16, c)
+        assert new.model == 16
+        assert new.chips <= c.chips - 16
+
+    def test_reshard_plan_covers_all_new_shards(self):
+        plan = elastic.plan_reshard(elastic.Carve(1, 8, 4),
+                                    elastic.Carve(1, 6, 4))
+        targets = {j for _, j in plan.param_moves}
+        assert targets == set(range(6))
+
+    def test_policy_actions(self):
+        pol = elastic.ElasticPolicy(elastic.Carve(1, 16, 16),
+                                    chips_per_host=8)
+        assert pol.decide({0: "healthy"}, None)[0] == "continue"
+        act = pol.decide({0: "healthy", 1: "dead"}, 500)
+        assert act[0] == "restore" and act[1] == 500
+        act = pol.decide({0: "healthy", 1: "straggler"}, None)
+        assert act[0] == "evict"
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+class TestServe:
+    def test_continuous_batching_isolation(self):
+        """A request's output must not depend on its neighbours."""
+        cfg = get_smoke_config("yi-6b")
+        m = Model(cfg)
+        params = m.init(jax.random.key(0))
+        rc = RunConfig()
+        prompt = np.arange(1, 8) % cfg.vocab_size
+        eng1 = Engine(m, params, rc, slots=4, s_max=64)
+        eng1.submit(prompt, 5)
+        solo = eng1.run()[0].out_tokens
+        eng2 = Engine(m, params, rc, slots=4, s_max=64)
+        for n in (3, 7, 2, 9):
+            eng2.submit(np.arange(1, 1 + n) % cfg.vocab_size, 5)
+        batched = [r for r in eng2.run() if len(r.prompt) == 7][0].out_tokens
+        assert solo == batched
+
+    def test_slot_recycling(self):
+        cfg = get_smoke_config("qwen1.5-4b")
+        m = Model(cfg)
+        params = m.init(jax.random.key(0))
+        eng = Engine(m, params, RunConfig(), slots=2, s_max=48)
+        for i in range(6):
+            eng.submit(np.arange(1, 4), 3)
+        done = eng.run()
+        assert len(done) == 6
+        assert all(len(r.out_tokens) == 3 for r in done)
+
+    def test_kv_budget_enforced(self):
+        cfg = get_smoke_config("yi-6b")
+        m = Model(cfg)
+        params = m.init(jax.random.key(0))
+        with pytest.raises(ValueError):
+            Engine(m, params, RunConfig(), slots=512, s_max=1 << 20,
+                   hbm_bytes=1e6)
+
+    def test_cache_plan_arithmetic(self):
+        cfg = get_config("yi-6b")
+        plan = CachePlan.build(cfg, RunConfig(), hbm_bytes=16e9, kv_frac=0.3)
+        assert plan.fits(plan.max_batch(32768), 32768)
+        assert not plan.fits(plan.max_batch(32768) + 1, 32768)
+        int8 = CachePlan.build(cfg, RunConfig(kv_cache_dtype="int8"),
+                               hbm_bytes=16e9, kv_frac=0.3)
+        assert int8.max_batch(32768) >= 2 * plan.max_batch(32768) * 0.9
+
+
+# ---------------------------------------------------------------------------
+# cost model + evaluators (the test cluster)
+# ---------------------------------------------------------------------------
+
+class TestCostModel:
+    def test_multi_peak_block_response(self):
+        """Fig. 2b shape: the block response is non-monotone (multi-peak)."""
+        effs = [mxu_block_efficiency(b, 512, 4096, 128, V5E)
+                for b in range(128, 2049, 128)]
+        d = np.sign(np.diff(effs))
+        assert (d > 0).any() and (d < 0).any()
+
+    def test_inert_knobs_have_no_effect(self):
+        cfg = get_config("yi-6b")
+        cell = SHAPES_BY_NAME["train_4k"]
+        space, _, _ = km.clean_space(cfg, cell, SINGLE_POD)
+        base = space.default_config()
+        t0 = estimate(cfg, cell, SINGLE_POD, base).step_s
+        for k in space.knobs:
+            if k.inert and k.kind in ("int", "float"):
+                mod = dict(base)
+                mod[k.name] = k.hi
+                assert estimate(cfg, cell, SINGLE_POD, mod).step_s == t0, \
+                    k.name
+
+    def test_microbatch_saturation(self):
+        cfg = get_config("yi-6b")
+        cell = SHAPES_BY_NAME["train_4k"]
+        base = {"microbatch": 1}
+        big = {"microbatch": 16}
+        assert estimate(cfg, cell, SINGLE_POD, big).step_s \
+            < estimate(cfg, cell, SINGLE_POD, base).step_s
+
+    def test_oom_penalized(self):
+        cfg = get_config("grok-1-314b")
+        cell = SHAPES_BY_NAME["train_4k"]
+        bad = {"fsdp_shard_params": False, "remat_policy": "none",
+               "microbatch": 16}
+        bd = estimate(cfg, cell, SINGLE_POD, bad)
+        assert not bd.feasible
+
+    def test_noise_distribution(self):
+        cfg = get_config("yi-6b")
+        cell = SHAPES_BY_NAME["train_4k"]
+        ev = AnalyticEvaluator(cfg, cell, SINGLE_POD, noise_sigma=0.025)
+        base = {}
+        vals = np.array([ev(base) for _ in range(60)])
+        true = ev.true_step(base)
+        rel = vals / true - 1
+        assert 0.01 < np.std(rel) < 0.05      # ~2.5 % multiplicative noise
+        assert abs(np.mean(rel)) < 0.02
+
+    def test_multipod_scales(self):
+        cfg = get_config("yi-6b")
+        cell = SHAPES_BY_NAME["train_4k"]
+        t1 = estimate(cfg, cell, SINGLE_POD, {"microbatch": 16}).compute_s
+        t2 = estimate(cfg, cell, MULTI_POD, {"microbatch": 16}).compute_s
+        assert t2 < t1                         # 512 chips beat 256

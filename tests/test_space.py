@@ -1,0 +1,144 @@
+"""Parameter space + constraint resolution (§3.2): unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import constraints as cres
+from repro.core import sampling
+from repro.core.knobs import build_raw_space, clean_space
+from repro.core.space import (Divides, Knob, Leq, ProductLeq, Space, SumLeq)
+from repro.configs import get_config
+from repro.core.costmodel import SINGLE_POD
+from repro.models.config import SHAPES_BY_NAME
+
+
+def make_space():
+    return Space(
+        knobs=(
+            Knob("a", "int", 8, lo=1, hi=64, log_scale=True),
+            Knob("b", "float", 0.5, lo=0.0, hi=1.0),
+            Knob("c", "float", 0.3, lo=0.0, hi=1.0),
+            Knob("sel", "categorical", "x", choices=("x", "y", "z")),
+            Knob("gated", "int", 4, lo=1, hi=16, gated_by=("sel", ("y",))),
+            Knob("flag", "bool", True),
+            Knob("fixed", "int", 7, lo=7, hi=8, configurable=False),
+        ),
+        constraints=(SumLeq(("b", "c"), limit=0.9),),
+    )
+
+
+class TestKnob:
+    def test_unit_roundtrip_log(self):
+        k = Knob("x", "int", 8, lo=1, hi=64, log_scale=True)
+        for v in (1, 2, 8, 64):
+            assert k.from_unit(k.to_unit(v)) == v
+
+    def test_align(self):
+        k = Knob("x", "int", 512, lo=128, hi=2048, align=128)
+        assert k.clip(300) == 256
+        assert k.clip(5000) == 2048
+
+    def test_expand_dynamic(self):
+        k = Knob("x", "float", 8.0, lo=1.0, hi=64.0, log_scale=True,
+                 dynamic_bound=True)
+        e = k.expanded(2.0)
+        assert e.lo < 1.0 and e.hi > 64.0
+
+    def test_expand_static_noop(self):
+        k = Knob("x", "float", 8.0, lo=1.0, hi=64.0)
+        assert k.expanded(2.0) == k
+
+
+class TestConstraints:
+    def test_sum_leq_projection(self):
+        sp = make_space()
+        cfg = sp.project({"a": 8, "b": 0.8, "c": 0.8, "sel": "x",
+                          "gated": 4, "flag": True, "fixed": 7})
+        assert cfg["b"] + cfg["c"] <= 0.9 + 1e-9
+
+    def test_gating_pins_inactive(self):
+        sp = make_space()
+        cfg = sp.project({"a": 8, "b": 0.1, "c": 0.1, "sel": "x",
+                          "gated": 13, "flag": True, "fixed": 7})
+        assert cfg["gated"] == 4          # sel != y -> pinned to default
+        cfg = sp.project({**cfg, "sel": "y", "gated": 13})
+        assert cfg["gated"] == 13
+
+    def test_divides_projection(self):
+        sp = Space((Knob("m", "int", 4, lo=1, hi=16),),
+                   (Divides(("m",), target=12),))
+        assert sp.project({"m": 5})["m"] in (1, 2, 3, 4, 6, 12)
+
+    def test_product_leq(self):
+        sp = Space((Knob("p", "int", 512, lo=128, hi=2048, align=128),
+                    Knob("q", "int", 512, lo=128, hi=2048, align=128)),
+                   (ProductLeq(("p", "q"), limit=512 * 512),))
+        cfg = sp.project({"p": 2048, "q": 2048})
+        assert cfg["p"] * cfg["q"] <= 512 * 512
+
+    def test_leq(self):
+        sp = Space((Knob("lo_", "int", 2, lo=1, hi=64),
+                    Knob("hi_", "int", 8, lo=1, hi=64)),
+                   (Leq(("lo_", "hi_")),))
+        cfg = sp.project({"lo_": 32, "hi_": 8})
+        assert cfg["lo_"] <= cfg["hi_"]
+
+
+class TestResolver:
+    def test_wash_removes_unconfigurable(self):
+        sp, pins, report = cres.resolve(make_space())
+        assert "fixed" not in sp.names
+        assert report["washed"] == 1
+
+    def test_prune_gated_by_pin(self):
+        sp, pins, _ = cres.resolve(make_space(), pinned={"sel": "x"})
+        assert "sel" not in sp.names
+        assert "gated" not in sp.names     # sel pinned to x -> y-gated gone
+
+    def test_prune_keeps_enabled(self):
+        sp, _, _ = cres.resolve(make_space(), pinned={"sel": "y"})
+        assert "gated" in sp.names
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40))
+def test_projection_idempotent_and_valid(seed, n):
+    """Property: every sample from the clean domain validates, and
+    project() is idempotent (the paper's 'no misconfigurations' claim)."""
+    sp = make_space()
+    clean, _, _ = cres.resolve(sp)
+    for cfg in sampling.random_configs(clean, min(n, 8), seed=seed):
+        assert clean.validate(cfg) == []
+        assert clean.project(cfg) == cfg
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_real_knobspace_samples_valid(seed):
+    """The full generated TPU knob space also yields only valid configs."""
+    cfg = get_config("yi-6b")
+    space, pins, report = clean_space(cfg, SHAPES_BY_NAME["train_4k"],
+                                      SINGLE_POD)
+    assert report["clean"] > 300          # paper-scale knob count
+    assert report["washed"] >= 20         # C1 knobs removed
+    for c in sampling.latin_hypercube(space, 4, seed=seed):
+        assert space.validate(c) == []
+
+
+def test_lhs_stratification():
+    sp, _, _ = cres.resolve(make_space())
+    rng = np.random.default_rng(0)
+    u = sampling.lhs_unit(rng, 16, 3)
+    # exactly one sample per stratum per dimension
+    for d in range(3):
+        assert sorted((u[:, d] * 16).astype(int).tolist()) == list(range(16))
+
+
+def test_dynamic_boundary_detection():
+    sp = Space((Knob("x", "float", 8.0, lo=1.0, hi=64.0, log_scale=True,
+                     dynamic_bound=True),))
+    assert sp.near_boundary({"x": 63.0}) == ["x"]
+    assert sp.near_boundary({"x": 8.0}) == []
+    sp2 = sp.expand_boundaries(["x"])
+    assert sp2.knob("x").hi > 64.0

@@ -1,0 +1,126 @@
+"""End-to-end SAPPHIRE integration (Fig. 3 pipeline) + roofline parser."""
+
+import numpy as np
+import pytest
+
+from repro.core.bo import BOConfig
+from repro.core.controller import Controller, EvalDB, EvalRecord
+from repro.core.tuner import Sapphire, expert_manual_config
+from repro.launch.roofline import analyze_hlo
+
+
+class TestSapphireEndToEnd:
+    @pytest.fixture(scope="class")
+    def result(self):
+        # the paper's own budgets: ~300 ranking samples, ~40+ BO iters.
+        # (half-budget runs converge on most seeds but not all — seed
+        # variance at tiny budgets is expected of BO, not a defect)
+        s = Sapphire(arch="yi-6b", shape="train_4k", top_k=16,
+                     n_rank_samples=200,
+                     bo_config=BOConfig(n_init=10, n_iter=40,
+                                        n_candidates=1024, fit_steps=80,
+                                        seed=3),
+                     seed=3)
+        return s.tune()
+
+    def test_beats_default(self, result):
+        """The paper's headline: recommended >> default."""
+        assert result.speedup_vs_default > 1.5
+
+    def test_influential_knobs_found(self, result):
+        top = set(result.ranking.top(16))
+        assert {"tensor_parallel", "matmul_precision"} & top
+
+    def test_recommended_config_is_valid(self, result):
+        errs = result.final_space.validate(
+            {k: v for k, v in result.best_config.items()
+             if k in result.final_space.names})
+        assert errs == []
+
+    def test_summary_fields(self, result):
+        s = result.summary()
+        assert s["clean_domain"]["clean"] > 300
+        assert s["n_evaluations"] <= 200 + 10 + 40 + 2 + 4
+
+    def test_eval_budget_respected(self, result):
+        # ranking samples + BO evals + default/expert probes only
+        assert result.n_evaluations < 300
+
+
+def test_controller_db_roundtrip(tmp_path):
+    db_file = tmp_path / "evals.jsonl"
+    db = EvalDB(str(db_file))
+    ctrl = Controller(lambda c: float(c["x"]) * 2, db, tag="t")
+    assert ctrl({"x": 3}) == 6.0
+    assert ctrl({"x": 4}) == 8.0
+    db2 = EvalDB(str(db_file))
+    cfgs, vals = db2.pairs("t")
+    assert vals == [6.0, 8.0]
+    assert cfgs[0]["x"] == 3
+
+
+def test_expert_config_valid():
+    from repro.configs import get_config
+    from repro.core import knobs as km
+    from repro.core.costmodel import SINGLE_POD
+    from repro.models.config import SHAPES_BY_NAME
+    space, _, _ = km.clean_space(get_config("yi-6b"),
+                                 SHAPES_BY_NAME["train_4k"], SINGLE_POD)
+    cfg = expert_manual_config(space)
+    assert space.validate(cfg) == []
+    assert cfg["attention_impl"] == "flash"
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parser (on hand-written HLO)
+# ---------------------------------------------------------------------------
+
+SYNTH_HLO = """\
+HloModule test
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> f32[8,8] {
+  %arg = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %arg)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_roofline_trip_counted_flops():
+    r = analyze_hlo(SYNTH_HLO)
+    assert r.flops == 12 * 2 * 8 * 8 * 8            # 12 trips × dot
+    assert r.collective_bytes == 12 * 8 * 8 * 4     # 12 × all-reduce
+    assert r.trip_counts.get("body") == 12
+    assert "all-reduce" in r.coll_by_kind
+
+
+def test_roofline_dominant_classification():
+    r = analyze_hlo(SYNTH_HLO)
+    assert r.dominant in ("compute", "memory", "collective")
+    assert r.step_s >= max(r.compute_s, r.memory_s, r.collective_s)
