@@ -11,7 +11,6 @@ from __future__ import annotations
 
 from dataclasses import replace
 
-import numpy as np
 
 from benchmarks.common import save
 from repro.configs import get_config

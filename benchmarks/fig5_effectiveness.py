@@ -16,7 +16,7 @@ import numpy as np
 from benchmarks.common import save
 from repro.configs import get_config
 from repro.core.bo import BOConfig
-from repro.core.costmodel import MULTI_POD, SINGLE_POD
+from repro.core.costmodel import MULTI_POD
 from repro.core.evaluators import AnalyticEvaluator
 from repro.core.tuner import Sapphire, expert_manual_config
 from repro.models.config import SHAPES_BY_NAME

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import ascii_curve, save
 from repro.configs import get_config

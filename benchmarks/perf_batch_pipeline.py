@@ -1,0 +1,160 @@
+"""Batched vs sequential evaluation pipeline: Sapphire.tune() wall-clock.
+
+    PYTHONPATH=src python -m benchmarks.perf_batch_pipeline \
+        [--arch yi-6b] [--shape train_4k] [--batch 8] [--seed 3]
+
+Runs the full tuner twice at the SAME evaluation budget and seed:
+
+  * sequential — ``batch_size=1``: one config per Experiment-Unit call,
+    one GP refit per BO evaluation (the paper's loop);
+  * batched    — ``batch_size=q``: ranking scored in vmapped chunks,
+    constant-liar q-EI probes per GP refit, warm-started hyperparameters,
+    whole batches appended to the EvalDB.
+
+Because the ranking values are bit-identical between the two runs (the
+noise keys are indexed per evaluation, not per call pattern), both arms
+search the same top-K subspace from the same initial design — the only
+difference is how the budget is spent.  jit compilation is warmed up
+before timing (both arms share every compiled shape: the padded GP size
+is pinned from the budget), so the numbers compare steady-state pipeline
+cost, not XLA compile time.
+
+Acceptance target: >= 3x wall-clock speedup with the batched best-found
+step time within the evaluator's noise (±5 %) of the sequential one.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import Timer, save
+
+
+def warm_jit_caches(args, fit_steps, kernel: str = "matern52"):
+    """Pre-compile every jit entry both arms will hit: the GP fit scan
+    (each steps value), the posterior build, acquisition over the
+    candidate pool, and the ranking Lasso path (its shapes come from the
+    real clean space, so rank on throwaway values — no evaluations)."""
+    from repro.configs import get_config
+    from repro.core import gp, knobs as knobmod, ranking
+    from repro.core.costmodel import SINGLE_POD
+    from repro.core.sampling import latin_hypercube
+    from repro.models.config import SHAPES_BY_NAME
+
+    rng = np.random.default_rng(0)
+    d = args.top_k
+    pad_to = gp._bucket(args.n_init + args.n_iter)
+    n_cand = args.n_candidates + 256 + 5 * d     # pool + local + sweeps
+    x = rng.random((4, d)).astype(np.float32)
+    y = rng.random(4)
+    state = None
+    for steps in sorted(set(fit_steps)):
+        state = gp.fit(x, y, kernel, steps=steps, pad_to=pad_to)
+    xq = rng.random((n_cand, d)).astype(np.float32)
+    gp.expected_improvement(state, xq, 0.0, kernel)
+
+    space, _, _ = knobmod.clean_space(get_config(args.arch),
+                                      SHAPES_BY_NAME[args.shape], SINGLE_POD)
+    samples = latin_hypercube(space, args.rank_samples, seed=0)
+    ranking.rank(space, None, samples=samples,
+                 values=rng.random(len(samples)).tolist())
+
+    # noise-draw shapes: rank chunks, the q-batch, init batch, singletons
+    import jax.numpy as jnp
+    from repro.core import evaluators
+    shapes = {1, args.batch, args.n_init, min(64, args.rank_samples)}
+    if args.rank_samples % 64:
+        shapes.add(args.rank_samples % 64)
+    for m in shapes:
+        evaluators._lognoise(jnp.zeros((m, 2), jnp.uint32), 0.025)
+
+
+def run_arm(args, batch_size: int):
+    from repro.core.bo import BOConfig
+    from repro.core.tuner import Sapphire
+    # batch_size=1 is the classic pipeline: a full fit_steps GP refit
+    # before every single evaluation (what the pre-batch code did);
+    # the q-batch arm warm-starts hyperparameters across rounds.
+    bo_cfg = BOConfig(n_init=args.n_init, n_iter=args.n_iter,
+                      n_candidates=args.n_candidates, fit_steps=args.fit_steps,
+                      warm_start=batch_size > 1, seed=args.seed)
+    s = Sapphire(arch=args.arch, shape=args.shape, top_k=args.top_k,
+                 n_rank_samples=args.rank_samples, batch_size=batch_size,
+                 bo_config=bo_cfg, seed=args.seed)
+    with Timer() as t:
+        res = s.tune()
+    return res, t.wall_s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--top-k", type=int, default=16)
+    ap.add_argument("--rank-samples", type=int, default=300)
+    ap.add_argument("--n-init", type=int, default=8)
+    ap.add_argument("--n-iter", type=int, default=48)
+    ap.add_argument("--n-candidates", type=int, default=2048)
+    ap.add_argument("--fit-steps", type=int, default=150)
+    ap.add_argument("--no-warmup", action="store_true")
+    args = ap.parse_args(argv)
+
+    if not args.no_warmup:
+        from repro.core.bo import BOConfig
+        warm = BOConfig(fit_steps=args.fit_steps)
+        warm_steps = (warm.fit_steps_warm if warm.fit_steps_warm is not None
+                      else max(warm.fit_steps // 3, 20))
+        t0 = time.monotonic()
+        warm_jit_caches(args, (args.fit_steps, warm_steps))
+        print(f"jit warm-up: {time.monotonic() - t0:.1f}s (shared by both arms)")
+
+    res_b, wall_b = run_arm(args, args.batch)
+    res_s, wall_s = run_arm(args, 1)
+
+    speedup = wall_s / wall_b
+    rel_best = res_b.best_value / res_s.best_value - 1.0
+    budget = args.rank_samples + args.n_init + args.n_iter + 2
+
+    print(f"\n=== batched evaluation pipeline ({args.arch} × {args.shape}, "
+          f"budget {budget} evals, seed {args.seed}) ===")
+    for name, res, wall in (("sequential (q=1)", res_s, wall_s),
+                            (f"batched   (q={args.batch})", res_b, wall_b)):
+        print(f"  {name:18s} wall {wall:7.2f}s  best {res.best_value:.4f}s"
+              f"  evals {res.n_evaluations}"
+              f"  speedup_vs_default {res.speedup_vs_default:.2f}x")
+    print(f"\n  wall-clock speedup : {speedup:.2f}x "
+          f"({'PASS' if speedup >= 3.0 else 'BELOW'} the 3x target)")
+    verdict = ("within ±5% noise" if abs(rel_best) <= 0.05 else
+               "better than sequential" if rel_best < 0 else
+               "OUTSIDE ±5% noise")
+    print(f"  best-found delta   : {100 * rel_best:+.2f}% ({verdict})")
+
+    payload = {
+        "arch": args.arch, "shape": args.shape, "seed": args.seed,
+        "batch": args.batch, "budget_evals": budget,
+        "wall_s_sequential": wall_s, "wall_s_batched": wall_b,
+        "speedup": speedup,
+        "best_sequential": res_s.best_value, "best_batched": res_b.best_value,
+        "rel_best_delta": rel_best,
+        "evals_sequential": res_s.n_evaluations,
+        "evals_batched": res_b.n_evaluations,
+        "boundary_events_sequential": len(res_s.trace.boundary_events),
+        "boundary_events_batched": len(res_b.trace.boundary_events),
+    }
+    save("perf_batch_pipeline", payload)
+    return payload
+
+
+def run(quick: bool = False):
+    """benchmarks.run entry point."""
+    argv = ["--rank-samples", "120", "--n-iter", "24"] if quick else []
+    main(argv)
+
+
+if __name__ == "__main__":
+    main()

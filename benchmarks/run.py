@@ -9,6 +9,7 @@ One module per paper table/figure (DESIGN.md §7):
   fig5   default vs expert vs SAPPHIRE (+ product-env transfer)
   sec34  BO vs SA vs GA vs random
   roofline  §Roofline table from the dry-run artifacts
+  perf_batch  batched vs sequential evaluation pipeline wall-clock
 """
 
 from __future__ import annotations
@@ -20,7 +21,8 @@ import traceback
 
 from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig5_effectiveness, fig5b_compiled_transfer,
-                        fig6_ranking, fig7_topk_efficiency, roofline_table,
+                        fig6_ranking, fig7_topk_efficiency,
+                        perf_batch_pipeline, roofline_table,
                         sec34_optimizers, table2_top16)
 
 MODULES = [
@@ -33,6 +35,7 @@ MODULES = [
     ("fig5_effectiveness", fig5_effectiveness),
     ("fig5b_compiled_transfer", fig5b_compiled_transfer),
     ("roofline_table", roofline_table),
+    ("perf_batch_pipeline", perf_batch_pipeline),
 ]
 
 

@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--top-k", type=int, default=16)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="configs per Experiment-Unit round (q-batch BO + "
+                         "chunked ranking); 1 = the paper's sequential loop")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -31,6 +34,7 @@ def main():
         arch=args.arch, shape=args.shape, top_k=args.top_k,
         multi_pod=args.multi_pod,
         n_rank_samples=120 if args.quick else 300,
+        batch_size=args.batch,
         bo_config=BOConfig(n_init=8, n_iter=16 if args.quick else 48,
                            n_candidates=1024, fit_steps=100, seed=args.seed),
         seed=args.seed)

@@ -12,12 +12,12 @@ recommendation report can state the application cost of the final config.
 from __future__ import annotations
 
 import json
-import os
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro.core.evaluators import evaluate_many
 from repro.core.space import Config, Space
 
 
@@ -44,15 +44,26 @@ class EvalDB:
                                                d.get("wall_s", 0.0),
                                                d.get("tag", "")))
 
+    @staticmethod
+    def _line(rec: EvalRecord) -> str:
+        return json.dumps({"config": {k: _json_safe(v) for k, v
+                                      in rec.config.items()},
+                           "value": _json_safe(rec.value),
+                           "wall_s": rec.wall_s,
+                           "tag": rec.tag}) + "\n"
+
     def append(self, rec: EvalRecord):
-        self.records.append(rec)
-        if self.path:
+        self.append_batch([rec])
+
+    def append_batch(self, recs: Sequence[EvalRecord]):
+        """Record a whole evaluation batch: one list extend, one file
+        append (a batched experiment is the unit of work, and on a fleet
+        the JSONL write is a remote call worth amortizing)."""
+        self.records.extend(recs)
+        if self.path and recs:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             with self.path.open("a") as f:
-                f.write(json.dumps({"config": {k: _json_safe(v) for k, v
-                                               in rec.config.items()},
-                                    "value": rec.value, "wall_s": rec.wall_s,
-                                    "tag": rec.tag}) + "\n")
+                f.writelines(self._line(r) for r in recs)
 
     def pairs(self, tag: Optional[str] = None) -> Tuple[List[Config], List[float]]:
         rs = [r for r in self.records if tag is None or r.tag == tag]
@@ -87,6 +98,18 @@ class Controller:
         self.db.append(EvalRecord(dict(cfg), v, time.monotonic() - t0,
                                   self.tag))
         return v
+
+    def evaluate_batch(self, cfgs: Sequence[Config]) -> List[float]:
+        """Evaluate a whole batch (via the evaluator's ``evaluate_batch``
+        when it has one) and record it as one tagged DB append.  Each
+        record's ``wall_s`` is the batch wall-clock amortized per config."""
+        cfgs = [dict(c) for c in cfgs]
+        t0 = time.monotonic()
+        vals = evaluate_many(self.evaluate, cfgs)
+        wall = (time.monotonic() - t0) / max(len(cfgs), 1)
+        self.db.append_batch([EvalRecord(c, v, wall, self.tag)
+                              for c, v in zip(cfgs, vals)])
+        return vals
 
     def with_tag(self, tag: str) -> "Controller":
         return Controller(self.evaluate, self.db, tag)

@@ -23,10 +23,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
-from repro.models.config import (ATTN, MAMBA, MLP_DENSE, MLP_MOE, MLP_NONE,
-                                 MLSTM, SLSTM, ModelConfig, ShapeCell)
+from repro.models.config import (ATTN, MAMBA, MLP_MOE, MLSTM, SLSTM,
+    ModelConfig, ShapeCell)
 
 Config = Dict[str, object]
 

@@ -12,6 +12,15 @@
 
 Both return *step seconds* (lower is better) and log every evaluation into
 the evaluation database (controller.py).
+
+Batch protocol: every evaluator additionally exposes
+``evaluate_batch(configs) -> np.ndarray`` scoring n configs at once — the
+test cluster can run many benchmarks concurrently (BestConfig's
+parallelized sampling rounds), so the tuner stack treats the batch as the
+unit of work.  ``AnalyticEvaluator`` draws its noise with a *per-row* PRNG
+key and a single vmapped draw, so a batch reproduces the noise stream of
+n sequential ``__call__``s (same keys; values equal to f32 ULP);
+``CompiledEvaluator`` falls back to a thread pool over the compile cache.
 """
 
 from __future__ import annotations
@@ -19,8 +28,10 @@ from __future__ import annotations
 import hashlib
 import json
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Dict, List, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import (SINGLE_POD, CostBreakdown, Hardware,
@@ -34,7 +45,20 @@ def _stable_seed(cfg: Config, salt: int) -> int:
     probes of one config see fresh noise (the paper's averaging dilemma)."""
     s = json.dumps({k: str(v) for k, v in sorted(cfg.items())}, sort_keys=True)
     h = hashlib.blake2s(f"{s}|{salt}".encode()).digest()[:8]
-    return int.from_bytes(h, "little")
+    return int.from_bytes(h, "little") >> 1      # 63-bit: fits PRNGKey int64
+
+
+def _key_data(seed: int) -> np.ndarray:
+    """Raw threefry key words for a 63-bit seed.  Built host-side so a
+    batch of keys is one uint32 [n, 2] transfer, not n PRNGKey dispatches
+    (and, unlike ``PRNGKey``, keeps the high word under default x32)."""
+    return np.array([seed >> 32, seed & 0xFFFFFFFF], np.uint32)
+
+
+@jax.jit
+def _lognoise(keys: jnp.ndarray, sigma) -> jnp.ndarray:
+    """exp(σ·z) with one independent standard normal per row key."""
+    return jnp.exp(sigma * jax.vmap(jax.random.normal)(keys))
 
 
 @dataclass
@@ -55,19 +79,43 @@ class AnalyticEvaluator:
         """Noise-free objective (tests / regret reporting only)."""
         return self.breakdown(knobs).step_s
 
+    def _record(self, knobs: Config, bd: CostBreakdown, step: float):
+        self.history.append({"knobs": dict(knobs), "step_s": step,
+                             "true_step_s": bd.step_s,
+                             "feasible": bd.feasible})
+
     def __call__(self, knobs: Config) -> float:
         bd = self.breakdown(knobs)
         self.calls += 1
         noise = 1.0
         if self.noise_sigma > 0:
-            rng = np.random.default_rng(
-                _stable_seed(knobs, self.seed + self.calls))
-            noise = float(np.exp(rng.normal(0.0, self.noise_sigma)))
+            keys = _key_data(_stable_seed(knobs, self.seed + self.calls))
+            noise = float(_lognoise(jnp.asarray(keys[None]),
+                                    self.noise_sigma)[0])
         step = bd.step_s * noise
-        self.history.append({"knobs": dict(knobs), "step_s": step,
-                             "true_step_s": bd.step_s,
-                             "feasible": bd.feasible})
+        self._record(knobs, bd, step)
         return step
+
+    def evaluate_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        """Score n configs in one shot; same noise stream as n sequential
+        ``__call__``s (each row keeps its own eval-indexed noise key)."""
+        cfgs = list(configs)
+        if not cfgs:
+            return np.zeros(0, np.float64)
+        bds = [self.breakdown(c) for c in cfgs]
+        base = self.calls
+        self.calls += len(cfgs)
+        steps = np.asarray([bd.step_s for bd in bds], np.float64)
+        if self.noise_sigma > 0:
+            keys = np.stack([
+                _key_data(_stable_seed(c, self.seed + base + i + 1))
+                for i, c in enumerate(cfgs)])
+            noise = np.asarray(
+                _lognoise(jnp.asarray(keys), self.noise_sigma), np.float64)
+            steps = steps * noise
+        for c, bd, s in zip(cfgs, bds, steps):
+            self._record(c, bd, float(s))
+        return steps
 
 
 @dataclass
@@ -81,20 +129,65 @@ class CompiledEvaluator:
     model_cfg: ModelConfig
     cell: ShapeCell
     multi_pod: bool = False
+    max_workers: int = 4               # evaluate_batch thread pool width
     calls: int = 0
     history: list = field(default_factory=list)
     _cache: Dict[str, float] = field(default_factory=dict)
 
-    def __call__(self, knobs: Config) -> float:
+    @staticmethod
+    def _key(knobs: Config) -> str:
+        return json.dumps({k: str(v) for k, v in sorted(knobs.items())},
+                          sort_keys=True)
+
+    def _compile(self, knobs: Config) -> float:
         from repro.launch.dryrun import compile_cell  # lazy
-        key = json.dumps({k: str(v) for k, v in sorted(knobs.items())},
-                         sort_keys=True)
-        if key in self._cache:
-            return self._cache[key]
         res = compile_cell(self.model_cfg, self.cell, knobs,
                            multi_pod=self.multi_pod)
-        step = res["roofline"]["step_s"]
+        return res["roofline"]["step_s"]
+
+    def __call__(self, knobs: Config) -> float:
+        key = self._key(knobs)
+        if key in self._cache:
+            return self._cache[key]
+        step = self._compile(knobs)
         self.calls += 1
         self.history.append({"knobs": dict(knobs), "step_s": step})
         self._cache[key] = step
         return step
+
+    def evaluate_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        """Thread-pooled fallback: the compile path releases the GIL inside
+        XLA, so distinct configs lower concurrently.  Cache hits and
+        duplicate configs within the batch compile once."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        cfgs = list(configs)
+        keys = [self._key(c) for c in cfgs]
+        missing: Dict[str, Config] = {}
+        for k, c in zip(keys, cfgs):
+            if k not in self._cache and k not in missing:
+                missing[k] = c
+        if missing:
+            order = list(missing)
+            workers = min(self.max_workers, len(order))
+            if workers > 1:
+                with ThreadPoolExecutor(workers) as ex:
+                    steps = list(ex.map(self._compile,
+                                        (missing[k] for k in order)))
+            else:
+                steps = [self._compile(missing[k]) for k in order]
+            for k, step in zip(order, steps):
+                self.calls += 1
+                self.history.append({"knobs": dict(missing[k]),
+                                     "step_s": step})
+                self._cache[k] = step
+        return np.asarray([self._cache[k] for k in keys], np.float64)
+
+
+def evaluate_many(evaluate, configs: Sequence[Config]) -> List[float]:
+    """Batch-or-loop shim: use ``evaluate_batch`` when the evaluator has
+    one, otherwise fall back to sequential calls."""
+    batch = getattr(evaluate, "evaluate_batch", None)
+    if batch is not None:
+        return [float(v) for v in batch(configs)]
+    return [float(evaluate(c)) for c in configs]

@@ -18,9 +18,8 @@ observations.  Implementation:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -122,6 +121,11 @@ def _build(params: GPParams, x, y, kind: str, extra_noise=None):
     return chol, alpha
 
 
+# jitted entry for posterior (re)builds outside the Adam loop — the
+# constant-liar fantasy update calls this once per batch pick
+_build_jit = partial(jax.jit, static_argnames=("kind",))(_build)
+
+
 def neg_log_marginal(params: GPParams, x, y, kind: str, extra_noise=None):
     chol, alpha = _build(params, x, y, kind, extra_noise)
     n = x.shape[0]
@@ -169,15 +173,10 @@ def _bucket(n: int) -> int:
     return ((n + 15) // 16) * 16
 
 
-def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
-        steps: int = 200, params: Optional[GPParams] = None,
-        pad: bool = True) -> GPState:
-    """Standardize y, fit hyperparameters, build the posterior.
-
-    ``pad`` appends huge-noise pseudo-points up to a shape bucket so the
-    jit caches of ``_fit``/``predict`` are reused across BO iterations
-    (the pads' posterior influence is ~1/PAD_NOISE — negligible).
-    """
+def _prepare(x: np.ndarray, y: np.ndarray, pad: bool,
+             pad_to: Optional[int] = None):
+    """Standardize y and append huge-noise pseudo-points up to the target
+    shape (``pad_to`` or the next bucket)."""
     x = np.asarray(x, np.float32)
     y_raw = np.asarray(y, np.float32)
     n, d = x.shape
@@ -186,8 +185,8 @@ def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
         y_std = 1.0
     ys = (y_raw - y_mean) / y_std
     extra = None
-    if pad:
-        m = _bucket(n)
+    if pad or pad_to:
+        m = max(_bucket(n), pad_to or 0)
         if m > n:
             x = np.vstack([x, np.full((m - n, d), 0.5, np.float32)])
             ys = np.concatenate([ys, np.zeros(m - n, np.float32)])
@@ -196,12 +195,41 @@ def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
     xj = jnp.asarray(x)
     yj = jnp.asarray(ys)
     ej = None if extra is None else jnp.asarray(extra)
+    return xj, yj, ej, y_mean, y_std
+
+
+def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
+        steps: int = 200, params: Optional[GPParams] = None,
+        pad: bool = True, pad_to: Optional[int] = None) -> GPState:
+    """Standardize y, fit hyperparameters, build the posterior.
+
+    ``pad`` appends huge-noise pseudo-points up to a shape bucket so the
+    jit caches of ``_fit``/``predict`` are reused across BO iterations
+    (the pads' posterior influence is ~1/PAD_NOISE — negligible).
+    ``pad_to`` pins the padded size outright: a BO run that knows its
+    total budget compiles each jit exactly once instead of once per
+    16-point growth bucket.
+
+    ``params`` warm-starts the hyperparameter optimization (e.g. from the
+    previous BO round's posterior); with ``steps=0`` they are used as-is.
+    """
+    xj, yj, ej, y_mean, y_std = _prepare(x, y, pad, pad_to)
     if params is None:
-        params = init_params(d)
-    params, _ = _fit(params, xj, yj, kind, steps=steps, extra_noise=ej)
-    chol, alpha = _build(params, xj, yj, kind, ej)
+        params = init_params(int(xj.shape[1]))
+    if steps > 0:
+        params, _ = _fit(params, xj, yj, kind, steps=steps, extra_noise=ej)
+    chol, alpha = _build_jit(params, xj, yj, kind, ej)
     return GPState(params, xj, yj, chol, alpha,
                    jnp.asarray(y_mean), jnp.asarray(y_std))
+
+
+def condition(params: GPParams, x: np.ndarray, y: np.ndarray,
+              kind: str = "matern52", pad: bool = True,
+              pad_to: Optional[int] = None) -> GPState:
+    """Posterior for (x, y) under *fixed* hyperparameters — no
+    marginal-likelihood refit.  This is the constant-liar fantasy update
+    of q-batch acquisition: one Cholesky rebuild, no Adam."""
+    return fit(x, y, kind, steps=0, params=params, pad=pad, pad_to=pad_to)
 
 
 @partial(jax.jit, static_argnames=("kind",))

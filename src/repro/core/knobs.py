@@ -22,11 +22,10 @@ Mirrors the structure of Ceph's 1536-knob space at framework scale
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.core import constraints as cres
-from repro.core.space import (Config, Divides, Knob, Leq, ProductLeq, Space,
-                              SumLeq)
+from repro.core.space import Divides, Knob, ProductLeq, Space, SumLeq
 from repro.models.config import ModelConfig, ShapeCell
 from repro.core.costmodel import MeshShape, V5E
 

@@ -20,9 +20,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.evaluators import evaluate_many
 from repro.core.lasso import lasso_path, path_importance
 from repro.core.sampling import latin_hypercube
-from repro.core.space import Config, Knob, Space
+from repro.core.space import Config, Space
 
 
 # ---------------------------------------------------------------------------
@@ -108,9 +109,16 @@ def rank(space: Space, evaluate: Callable[[Config], float],
          n_samples: int = 300, seed: int = 0,
          samples: Optional[List[Config]] = None,
          values: Optional[List[float]] = None,
-         stability_rounds: int = 0) -> RankingResult:
+         stability_rounds: int = 0,
+         batch_size: int = 1) -> RankingResult:
     """Run the §3.3 pipeline.  Pass pre-collected (samples, values) to rank
     an existing evaluation database without new experiments.
+
+    ``batch_size > 1`` scores the LHS design as that many-config batches
+    through the evaluator's ``evaluate_batch`` (one vmapped cost-model
+    sweep + one DB append per chunk) instead of n_samples sequential
+    calls — the test cluster can bench configs concurrently, so the 300
+    ranking experiments collapse to a handful of batch rounds.
 
     ``stability_rounds > 0`` enables **stability selection** (beyond-paper,
     Meinshausen & Bühlmann 2010): the lasso path is refit on that many
@@ -122,7 +130,13 @@ def rank(space: Space, evaluate: Callable[[Config], float],
     if samples is None:
         samples = latin_hypercube(space, n_samples, seed=seed)
     if values is None:
-        values = [float(evaluate(c)) for c in samples]
+        if batch_size > 1:
+            values = []
+            for i in range(0, len(samples), batch_size):
+                values.extend(evaluate_many(evaluate,
+                                            samples[i:i + batch_size]))
+        else:
+            values = [float(evaluate(c)) for c in samples]
 
     x, fmap = encode(space, samples)
     y = encode_target(values)

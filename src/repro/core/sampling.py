@@ -34,10 +34,10 @@ def lhs_unit(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
 def random_configs(space: Space, n: int, seed: int = 0) -> List[Config]:
     rng = np.random.default_rng(seed)
     u = random_unit(rng, n, len(space))
-    return [space.from_unit(row) for row in u]
+    return space.decode_batch(u)
 
 
 def latin_hypercube(space: Space, n: int, seed: int = 0) -> List[Config]:
     rng = np.random.default_rng(seed)
     u = lhs_unit(rng, n, len(space))
-    return [space.from_unit(row) for row in u]
+    return space.decode_batch(u)

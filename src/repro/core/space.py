@@ -20,10 +20,9 @@ dummy-coded by the ranking preprocessor (paper §3.3).
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from dataclasses import dataclass, field, replace
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -379,6 +378,116 @@ class Space:
     def from_unit(self, u: np.ndarray) -> Config:
         cfg = {k.name: k.from_unit(u[i]) for i, k in enumerate(self.knobs)}
         return self.project(cfg)
+
+    # ---- batched encode/decode (vectorized across configs) --------------------
+
+    def encode_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        """Vectorized :meth:`to_unit`: n configs -> ``[n, d]`` unit matrix.
+
+        One numpy expression per knob (the batch axis is the long one);
+        matches ``to_unit`` row-by-row exactly.
+        """
+        n = len(configs)
+        u = np.zeros((n, len(self.knobs)), np.float64)
+        for j, k in enumerate(self.knobs):
+            vals = [c[k.name] for c in configs]
+            if k.kind == "bool":
+                u[:, j] = np.fromiter((1.0 if v else 0.0 for v in vals),
+                                      np.float64, n)
+            elif k.kind == "categorical":
+                idx = {c: i for i, c in enumerate(k.choices)}
+                denom = max(len(k.choices) - 1, 1)
+                u[:, j] = np.fromiter((idx[v] for v in vals),
+                                      np.float64, n) / denom
+            else:
+                x = np.asarray([float(v) for v in vals], np.float64)
+                lo, hi = float(k.lo), float(k.hi)
+                if k.log_scale:
+                    lo, hi = math.log(lo), math.log(hi)
+                    x = np.log(np.maximum(x, 1e-300))
+                if hi != lo:
+                    u[:, j] = (x - lo) / (hi - lo)
+        return u
+
+    def decode_batch(self, u: np.ndarray, project: bool = True) -> List[Config]:
+        """Vectorized :meth:`from_unit`: ``[n, d]`` unit matrix -> n configs.
+
+        The unit->value map runs as one numpy expression per knob; the
+        C3/C4 projection (dict-shaped constraint logic) then runs per
+        config.  Matches ``from_unit`` row-by-row (bit-exact except
+        log-scaled floats, where vectorized exp may differ by 1 ulp).
+        """
+        u = np.asarray(u, np.float64)
+        cols: List[list] = []
+        for j, k in enumerate(self.knobs):
+            c = np.clip(u[:, j], 0.0, 1.0)
+            if k.kind == "bool":
+                cols.append([bool(b) for b in c >= 0.5])
+            elif k.kind == "categorical":
+                idx = np.rint(c * (len(k.choices) - 1)).astype(int)
+                cols.append([k.choices[i] for i in idx])
+            else:
+                lo, hi = float(k.lo), float(k.hi)
+                if k.log_scale:
+                    v = np.exp(math.log(lo) + c * (math.log(hi) - math.log(lo)))
+                else:
+                    v = lo + c * (hi - lo)
+                if k.kind == "int":
+                    v = np.rint(v)
+                    if k.align > 1:
+                        v = np.rint(v / k.align) * k.align
+                    v = np.minimum(np.maximum(v, lo), hi)
+                    cols.append([int(x) for x in v])
+                else:
+                    v = np.minimum(np.maximum(v, lo), hi)
+                    cols.append([float(x) for x in v])
+        names = self.names
+        cfgs = [dict(zip(names, row)) for row in zip(*cols)]
+        if not project:
+            return cfgs
+        return self.project_batch(cfgs, clip=False)   # decode already clipped
+
+    def project_batch(self, configs: Sequence[Config],
+                      clip: bool = True) -> List[Config]:
+        """Batched :meth:`project`: bound-clipping vectorized per knob, then
+        the per-config C3 gating and C4 constraint passes."""
+        outs: List[Config]
+        if clip:
+            cols: List[list] = []
+            for k in self.knobs:
+                vals = [c.get(k.name, k.default) for c in configs]
+                if k.kind == "int":
+                    v = np.rint([float(x) for x in vals])
+                    if k.align > 1:
+                        v = np.rint(v / k.align) * k.align
+                    v = np.minimum(np.maximum(v, float(k.lo)), float(k.hi))
+                    cols.append([int(x) for x in v])
+                elif k.kind == "float":
+                    v = np.minimum(np.maximum(
+                        np.asarray([float(x) for x in vals]),
+                        float(k.lo)), float(k.hi))
+                    cols.append([float(x) for x in v])
+                elif k.kind == "bool":
+                    cols.append([bool(x) for x in vals])
+                else:
+                    cols.append([x if x in k.choices else k.default
+                                 for x in vals])
+            names = self.names
+            outs = [dict(zip(names, row)) for row in zip(*cols)]
+        else:
+            outs = [dict(c) for c in configs]
+        for out in outs:
+            for k in self.knobs:
+                if k.gated_by is None:
+                    continue
+                sel, enabling = k.gated_by
+                if sel in out and out[sel] not in enabling:
+                    out[k.name] = k.default
+            for c in self.constraints:
+                new = c.project(out, self)
+                if new is not out:
+                    out.update(new)
+        return outs
 
     # ---- dynamic boundary (paper Fig. 4) --------------------------------------
 

@@ -16,12 +16,8 @@ runs the full pipeline:
 
 from __future__ import annotations
 
-import json
-from dataclasses import dataclass, field
-from pathlib import Path
-from typing import Callable, Dict, List, Optional
-
-import numpy as np
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.configs import get_config
 from repro.core import bo, knobs as knobmod, ranking
@@ -30,7 +26,7 @@ from repro.core.controller import Controller, EvalDB
 from repro.core.costmodel import MULTI_POD, SINGLE_POD, MeshShape
 from repro.core.evaluators import AnalyticEvaluator
 from repro.core.space import Config, Space
-from repro.models.config import SHAPES_BY_NAME, ModelConfig, ShapeCell
+from repro.models.config import SHAPES_BY_NAME
 
 
 def expert_manual_config(space: Space) -> Config:
@@ -102,6 +98,11 @@ class Sapphire:
     multi_pod: bool = False
     top_k: int = 16
     n_rank_samples: int = 300
+    batch_size: int = 1            # q-batch width: probes per GP refit AND
+                                   # configs per Experiment-Unit round;
+                                   # 1 = the paper's sequential loop
+    rank_batch_size: Optional[int] = None  # ranking chunk (None: 64 when
+                                           # batching, else sequential)
     bo_config: Optional[BOConfig] = None
     pinned: Optional[Dict[str, object]] = None
     noise_sigma: float = 0.025
@@ -125,20 +126,37 @@ class Sapphire:
         model_cfg, cell, mesh, space, pins, report, ctrl = self._setup()
 
         # ---- §3.3 ranking over the clean domain --------------------------
+        rank_bs = self.rank_batch_size
+        if rank_bs is None:
+            rank_bs = 64 if self.batch_size > 1 else 1
         rk = ranking.rank(space, ctrl.with_tag("rank"),
-                          n_samples=self.n_rank_samples, seed=self.seed)
+                          n_samples=self.n_rank_samples, seed=self.seed,
+                          batch_size=rank_bs)
         sub = rk.top_space(self.top_k)
 
         # non-top knobs are pinned at their defaults inside the objective
         base = space.default_config()
+        bo_ctrl = ctrl.with_tag("bo")
 
-        def objective(sub_cfg: Config) -> float:
+        def _full(sub_cfg: Config) -> Config:
             full = dict(base)
             full.update(sub_cfg)
-            return ctrl.with_tag("bo")(space.project(full))
+            return space.project(full)
+
+        def objective(sub_cfg: Config) -> float:
+            return bo_ctrl(_full(sub_cfg))
+
+        def objective_batch(sub_cfgs: Sequence[Config]) -> List[float]:
+            return bo_ctrl.evaluate_batch([_full(c) for c in sub_cfgs])
 
         bo_cfg = self.bo_config or BOConfig(seed=self.seed)
-        best_sub, best_v, trace, final_sub = bo.minimize(objective, sub, bo_cfg)
+        if self.batch_size != 1:
+            # batching opts into the full batched redesign: q-EI probes
+            # AND warm-started GP hyperparameters across rounds
+            bo_cfg = replace(bo_cfg, batch_size=self.batch_size,
+                             warm_start=True)
+        best_sub, best_v, trace, final_sub = bo.minimize(
+            objective, sub, bo_cfg, f_batch=objective_batch)
 
         best_full = dict(base)
         best_full.update(best_sub)

@@ -38,10 +38,8 @@ from pathlib import Path
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, canonical, get_config
-from repro.core.costmodel import MULTI_POD, SINGLE_POD
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import (SHAPES_BY_NAME, ModelConfig, ShapeCell,

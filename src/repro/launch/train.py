@@ -16,7 +16,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_host_mesh
@@ -25,7 +24,7 @@ from repro.runconfig import runconfig_from_knobs
 from repro.train import elastic
 from repro.train.checkpoint import CheckpointManager
 from repro.train.data import SyntheticDataset
-from repro.train.train_loop import TrainState, init_state, make_train_step
+from repro.train.train_loop import init_state, make_train_step
 
 
 def parse_knobs(pairs):

@@ -20,7 +20,6 @@ dtype knob bf16/int8-sim).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

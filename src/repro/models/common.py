@@ -11,7 +11,7 @@ copies owned by the optimizer (train/optimizer.py).
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

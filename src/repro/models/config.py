@@ -10,8 +10,8 @@ stack — compile time scales with the pattern length, not ``n_layers``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 # Layer kinds understood by the transformer stack.
 ATTN = "attn"

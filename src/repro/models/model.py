@@ -14,7 +14,7 @@ compiled evaluator) talks to this facade:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

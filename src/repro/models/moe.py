@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import mlp
-from repro.models.common import activation, dense_axes, dense_init, trunc_normal
+from repro.models.common import activation, trunc_normal
 from repro.models.config import ModelConfig
 from repro.runconfig import RunConfig
 

@@ -14,12 +14,13 @@ reference oracle (``ssd_reference``) and for single-token decode.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import dense_apply, dense_axes, dense_init, norm_apply, norm_init, norm_axes, trunc_normal
+from repro.models.common import (dense_apply, dense_axes, dense_init,
+    norm_apply, norm_init, trunc_normal)
 from repro.models.config import ModelConfig
 from repro.runconfig import RunConfig
 

@@ -16,8 +16,7 @@ Exposes:
 
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +24,8 @@ import jax.numpy as jnp
 from repro.models import attention, mlp, moe, ssm, xlstm
 from repro.models.common import (dense_apply, norm_apply, norm_axes,
                                  norm_init, stack_axes, stack_init, trunc_normal)
-from repro.models.config import (ATTN, MAMBA, MLP_DENSE, MLP_MOE, MLP_NONE,
-                                 MLSTM, SLSTM, LayerSpec, ModelConfig)
+from repro.models.config import (ATTN, MAMBA, MLP_DENSE, MLP_MOE, MLSTM,
+    SLSTM, LayerSpec, ModelConfig)
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.runconfig import RunConfig

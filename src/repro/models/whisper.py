@@ -12,14 +12,14 @@ the stacks are scanned with pattern length 1 like the other archs.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention, mlp
-from repro.models.common import (dense_apply, norm_apply, norm_axes, norm_init,
-                                 stack_axes, stack_init, trunc_normal)
+from repro.models.common import (norm_apply, norm_axes, norm_init,
+    stack_axes, stack_init, trunc_normal)
 from repro.models.config import ModelConfig
 from repro.runconfig import RunConfig
 

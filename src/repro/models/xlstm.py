@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import (dense_apply, dense_axes, dense_init,
-                                 norm_apply, norm_axes, norm_init, trunc_normal)
+    norm_apply, norm_init, trunc_normal)
 from repro.models.config import ModelConfig
 from repro.runconfig import RunConfig
 

@@ -16,7 +16,7 @@ Mesh axes (launch/mesh.py):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax

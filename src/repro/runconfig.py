@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.parallel.sharding import ShardConfig, shard_config_from_knobs
 

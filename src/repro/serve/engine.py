@@ -22,7 +22,7 @@ Mechanics (enabled by the model's per-slot position vector):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

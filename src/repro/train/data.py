@@ -17,11 +17,10 @@ data-dependent bugs (e.g. label misalignment) surface in tests.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def _unigram_logits(vocab: int) -> jnp.ndarray:

@@ -9,7 +9,7 @@ ZeRO semantics fall out of the axis rules for free).
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

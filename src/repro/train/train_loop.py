@@ -16,7 +16,7 @@ shardings).  Knobs that shape the compiled program:
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.config import applicable_shapes
 from repro.models.model import Model
 from repro.runconfig import RunConfig
-from repro.train.data import batch_at
 from repro.train.train_loop import init_state, make_train_step
 
 

@@ -1,0 +1,341 @@
+"""Batched evaluation pipeline: batch == sequential equivalences across
+the whole tuner stack (space codec, evaluators, controller/DB, q-batch BO,
+ranking, Sapphire)."""
+
+import numpy as np
+import pytest
+
+from repro.core import bo, gp, ranking
+from repro.core.controller import Controller, EvalDB, EvalRecord
+from repro.core.evaluators import AnalyticEvaluator, evaluate_many
+from repro.core.sampling import latin_hypercube
+from repro.core.space import Divides, Knob, Space, SumLeq
+
+
+def rich_space() -> Space:
+    return Space(
+        knobs=(
+            Knob("block", "int", 512, lo=128, hi=2048, align=128),
+            Knob("depth", "int", 8, lo=1, hi=64, log_scale=True),
+            Knob("frac_a", "float", 0.3, lo=0.0, hi=1.0),
+            Knob("frac_b", "float", 0.3, lo=0.0, hi=1.0),
+            Knob("lr", "float", 1e-3, lo=1e-5, hi=1e-1, log_scale=True),
+            Knob("impl", "categorical", "ref", choices=("ref", "flash", "chunk")),
+            Knob("fused", "bool", True),
+            Knob("gated", "int", 4, lo=1, hi=16, gated_by=("impl", ("flash",))),
+            Knob("div", "int", 4, lo=1, hi=16),
+        ),
+        constraints=(SumLeq(("frac_a", "frac_b"), limit=0.8),
+                     Divides(("div",), target=12)),
+    )
+
+
+def configs_equal(a, b, rtol=1e-9):
+    for k in a:
+        va, vb = a[k], b[k]
+        if isinstance(va, float):
+            if not np.isclose(va, vb, rtol=rtol):
+                return False
+        elif va != vb:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# space: batched codec == per-config codec
+# ---------------------------------------------------------------------------
+
+class TestSpaceBatchCodec:
+    def test_decode_batch_matches_from_unit(self):
+        sp = rich_space()
+        u = np.random.default_rng(0).random((64, len(sp)))
+        seq = [sp.from_unit(row) for row in u]
+        bat = sp.decode_batch(u)
+        assert all(configs_equal(a, b) for a, b in zip(seq, bat))
+
+    def test_encode_batch_matches_to_unit(self):
+        sp = rich_space()
+        cfgs = latin_hypercube(sp, 64, seed=1)
+        seq = np.stack([sp.to_unit(c) for c in cfgs])
+        bat = sp.encode_batch(cfgs)
+        assert np.allclose(seq, bat, rtol=1e-12)
+
+    def test_encode_decode_roundtrip(self):
+        sp = rich_space()
+        cfgs = latin_hypercube(sp, 32, seed=2)
+        again = sp.decode_batch(sp.encode_batch(cfgs))
+        assert all(configs_equal(a, b) for a, b in zip(cfgs, again))
+
+    def test_project_batch_matches_project(self):
+        sp = rich_space()
+        rng = np.random.default_rng(3)
+        raw = [{"block": int(rng.integers(0, 4096)),
+                "frac_a": float(rng.random() * 2),
+                "frac_b": float(rng.random() * 2),
+                "impl": "ref", "div": int(rng.integers(1, 20))}
+               for _ in range(40)]
+        seq = [sp.project(c) for c in raw]
+        bat = sp.project_batch(raw)
+        assert all(configs_equal(a, b) for a, b in zip(seq, bat))
+        # projection invariants hold on the batched path too
+        for c in bat:
+            assert c["frac_a"] + c["frac_b"] <= 0.8 + 1e-9
+            assert 12 % c["div"] == 0
+            assert sp.validate(c) == []
+
+
+# ---------------------------------------------------------------------------
+# evaluators: batch == N sequential calls (same seed, per-row noise keys)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def analytic_pair():
+    from repro.configs import get_config
+    from repro.core.costmodel import SINGLE_POD
+    from repro.core.knobs import clean_space
+    from repro.models.config import SHAPES_BY_NAME
+    model_cfg = get_config("yi-6b")
+    cell = SHAPES_BY_NAME["train_4k"]
+    space, _, _ = clean_space(model_cfg, cell, SINGLE_POD)
+    make = lambda: AnalyticEvaluator(model_cfg, cell, SINGLE_POD, seed=7)  # noqa: E731
+    return space, make
+
+
+class TestEvaluatorBatch:
+    def test_batch_matches_sequential(self, analytic_pair):
+        space, make = analytic_pair
+        cfgs = latin_hypercube(space, 20, seed=1)
+        a, b = make(), make()
+        va = list(a.evaluate_batch(cfgs))
+        vb = [b(c) for c in cfgs]
+        # same per-row noise keys -> same stream (equal to f32 ULP; XLA's
+        # vectorized exp may differ in the last bit across batch shapes)
+        assert np.allclose(va, vb, rtol=1e-6)
+
+    def test_interleaved_matches_sequential(self, analytic_pair):
+        """Noise is keyed per *evaluation index*, so any batch/sequential
+        interleaving reproduces the same stream."""
+        space, make = analytic_pair
+        cfgs = latin_hypercube(space, 15, seed=2)
+        a, b = make(), make()
+        va = ([a(c) for c in cfgs[:3]]
+              + list(a.evaluate_batch(cfgs[3:11]))
+              + [a(c) for c in cfgs[11:]])
+        vb = [b(c) for c in cfgs]
+        assert np.allclose(va, vb, rtol=1e-6)
+        assert a.calls == b.calls == len(cfgs)
+        assert len(a.history) == len(cfgs)
+
+    def test_repeated_config_fresh_noise(self, analytic_pair):
+        """The paper's averaging dilemma: same config, fresh noise."""
+        space, make = analytic_pair
+        ev = make()
+        cfg = space.default_config()
+        vals = ev.evaluate_batch([cfg] * 8)
+        assert len(set(float(v) for v in vals)) == 8
+
+    def test_empty_batch(self, analytic_pair):
+        _, make = analytic_pair
+        ev = make()
+        assert len(ev.evaluate_batch([])) == 0
+        assert ev.calls == 0
+
+    def test_evaluate_many_fallback(self):
+        calls = []
+        f = lambda c: calls.append(c) or float(c["x"])  # noqa: E731
+        vals = evaluate_many(f, [{"x": 1}, {"x": 2}])
+        assert vals == [1.0, 2.0] and len(calls) == 2
+
+
+# ---------------------------------------------------------------------------
+# controller / EvalDB: batched appends round-trip (incl. numpy scalars)
+# ---------------------------------------------------------------------------
+
+class TestControllerBatch:
+    def test_db_roundtrips_batched_numpy_values(self, tmp_path):
+        db_file = tmp_path / "evals.jsonl"
+        db = EvalDB(str(db_file))
+        recs = [
+            EvalRecord({"a": np.int64(3), "b": np.float32(0.25),
+                        "c": np.bool_(True), "d": "flash"},
+                       float(np.float32(1.5)), 0.1, "bo"),
+            EvalRecord({"a": 4, "b": 0.5, "c": False, "d": "ref"},
+                       2.5, 0.1, "bo"),
+        ]
+        db.append_batch(recs)
+        db2 = EvalDB(str(db_file))
+        cfgs, vals = db2.pairs("bo")
+        assert vals == [1.5, 2.5]
+        assert cfgs[0] == {"a": 3, "b": 0.25, "c": True, "d": "flash"}
+
+    def test_controller_batch_matches_sequential_and_tags(self, tmp_path):
+        f = lambda c: float(c["x"]) * 2   # noqa: E731
+        db = EvalDB(str(tmp_path / "e.jsonl"))
+        ctrl = Controller(f, db, tag="t")
+        vals = ctrl.evaluate_batch([{"x": 1}, {"x": np.int64(2)}, {"x": 3}])
+        assert vals == [2.0, 4.0, 6.0]
+        assert len(db) == 3 and all(r.tag == "t" for r in db.records)
+        reloaded = EvalDB(str(tmp_path / "e.jsonl"))
+        assert reloaded.pairs("t")[1] == vals
+
+    def test_controller_uses_evaluator_batch(self, analytic_pair):
+        space, make = analytic_pair
+        ev = make()
+        ctrl = Controller(ev, EvalDB(), tag="rank")
+        cfgs = latin_hypercube(space, 6, seed=3)
+        vals = ctrl.evaluate_batch(cfgs)
+        assert ev.calls == 6                      # one batched call
+        assert vals == [r.value for r in ctrl.db.records]
+
+
+# ---------------------------------------------------------------------------
+# GP: conditioning (the q-batch fantasy update)
+# ---------------------------------------------------------------------------
+
+class TestGPCondition:
+    def test_condition_matches_fit_with_fixed_params(self):
+        rng = np.random.default_rng(0)
+        x = rng.random((24, 2)).astype(np.float32)
+        y = np.sin(3 * x[:, 0]) + x[:, 1]
+        st = gp.fit(x, y, steps=80)
+        st2 = gp.condition(st.params, x, y)
+        mu1, sd1 = gp.predict(st, x[:5])
+        mu2, sd2 = gp.predict(st2, x[:5])
+        assert np.allclose(np.asarray(mu1), np.asarray(mu2), atol=1e-5)
+        assert np.allclose(np.asarray(sd1), np.asarray(sd2), atol=1e-5)
+
+    def test_fantasy_collapses_uncertainty(self):
+        """Conditioning on a fantasized point must kill the posterior
+        variance there — the mechanism that spreads a q-batch."""
+        rng = np.random.default_rng(1)
+        x = rng.random((16, 2)).astype(np.float32)
+        y = x.sum(axis=1)
+        st = gp.fit(x, y, steps=80)
+        xq = np.array([[0.9, 0.1]], np.float32)
+        _, sd_before = gp.predict(st, xq)
+        x_aug = np.vstack([x, xq])
+        y_aug = np.append(y, float(y.min()))
+        st2 = gp.condition(st.params, x_aug, y_aug)
+        _, sd_after = gp.predict(st2, xq)
+        # observed points keep the fitted noise floor, so "collapse" means
+        # well below the away-from-data std, not zero
+        assert float(sd_after[0]) < 0.45 * float(sd_before[0])
+
+
+# ---------------------------------------------------------------------------
+# EI regression: peaks at the known minimum of a noiseless 1-D objective
+# (guards the best_y threshold convention: predict() de-standardizes, so
+# best_y is passed on the original y scale — no extra standardization)
+# ---------------------------------------------------------------------------
+
+def test_ei_peaks_at_known_minimum():
+    xs = np.linspace(0.0, 1.0, 12, dtype=np.float32)[:, None]
+    ys = (xs[:, 0] - 0.3) ** 2                 # noiseless, minimum at 0.3
+    st = gp.fit(xs, ys, steps=150)
+    cand = np.linspace(0.0, 1.0, 501, dtype=np.float32)[:, None]
+    ei = np.asarray(gp.expected_improvement(st, cand, float(ys.min())))
+    assert abs(float(cand[int(np.argmax(ei)), 0]) - 0.3) < 0.06
+    # EI must be ~dead on already-sampled far-away points
+    far = np.asarray(gp.expected_improvement(st, xs[-2:], float(ys.min())))
+    assert float(far.max()) < float(ei.max()) * 1e-2
+
+
+# ---------------------------------------------------------------------------
+# BO: q-batch budget accounting + convergence
+# ---------------------------------------------------------------------------
+
+def _space2d():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+
+
+class TestQBatchBO:
+    @pytest.mark.parametrize("q", [1, 3, 5])
+    def test_budget_exact_for_any_q(self, q):
+        """n_iter counts evaluations, so the experiment budget is
+        identical whatever the batch width (incl. non-divisible q)."""
+        n_calls = []
+        f = lambda c: (c["x"] - 0.5) ** 2     # noqa: E731
+
+        def f_batch(cfgs):
+            n_calls.append(len(cfgs))
+            return [f(c) for c in cfgs]
+
+        cfg = bo.BOConfig(n_init=4, n_iter=13, batch_size=q,
+                          n_candidates=64, fit_steps=20)
+        _, _, trace, _ = bo.minimize(f, _space2d(), cfg, f_batch=f_batch)
+        assert len(trace.values) == 4 + 13
+        if q > 1:
+            # init batch, then full q-rounds, then the remainder round
+            full, rem = divmod(13, q)
+            assert n_calls == [4] + [q] * full + ([rem] if rem else [])
+
+    def test_qbatch_converges_on_quadratic(self):
+        rng = np.random.default_rng(0)
+        f = lambda c: (c["x"] - 0.7) ** 2 + (c["y"] - 0.2) ** 2 \
+            + rng.normal(0, 0.005)
+        f_batch = lambda cfgs: [f(c) for c in cfgs]   # noqa: E731
+        best, _, trace, _ = bo.minimize(
+            f, _space2d(), bo.BOConfig(n_init=6, n_iter=24, batch_size=6,
+                                       n_candidates=256, fit_steps=60),
+            f_batch=f_batch)
+        assert abs(best["x"] - 0.7) < 0.15 and abs(best["y"] - 0.2) < 0.15
+
+    def test_qbatch_without_f_batch_falls_back(self):
+        f = lambda c: (c["x"] - 0.3) ** 2     # noqa: E731
+        _, _, trace, _ = bo.minimize(
+            f, _space2d(), bo.BOConfig(n_init=4, n_iter=8, batch_size=4,
+                                       n_candidates=64, fit_steps=20))
+        assert len(trace.values) == 12
+        bv = trace.best_values
+        assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(bv, bv[1:]))
+
+    def test_batch_probes_are_distinct(self):
+        """The constant liar must spread a round's probes, not stack q
+        copies of the EI argmax."""
+        seen = []
+
+        def f_batch(cfgs):
+            seen.append([tuple(sorted(c.items())) for c in cfgs])
+            return [(c["x"] - 0.6) ** 2 + (c["y"] - 0.4) ** 2 for c in cfgs]
+
+        f = lambda c: f_batch([c])[0]         # noqa: E731
+        bo.minimize(f, _space2d(),
+                    bo.BOConfig(n_init=4, n_iter=12, batch_size=4,
+                                n_candidates=128, fit_steps=30),
+                    f_batch=f_batch)
+        rounds = [s for s in seen if len(s) == 4][1:]   # skip init batch
+        for r in rounds:
+            assert len(set(r)) == len(r)
+
+
+# ---------------------------------------------------------------------------
+# ranking + Sapphire: batched == sequential end to end
+# ---------------------------------------------------------------------------
+
+def test_ranking_batched_matches_sequential(analytic_pair):
+    space, make = analytic_pair
+    sub = space.subset(list(space.names[:12]))
+    rk_seq = ranking.rank(sub, make(), n_samples=60, seed=5)
+    rk_bat = ranking.rank(sub, make(), n_samples=60, seed=5, batch_size=25)
+    assert np.allclose(rk_seq.values, rk_bat.values, rtol=1e-6)
+    assert rk_seq.top(5) == rk_bat.top(5)
+    assert np.allclose(rk_seq.importance, rk_bat.importance, rtol=1e-3)
+
+
+def test_sapphire_batched_end_to_end(tmp_path):
+    from repro.core.bo import BOConfig
+    from repro.core.tuner import Sapphire
+    s = Sapphire(arch="yi-6b", shape="train_4k", top_k=8, n_rank_samples=40,
+                 batch_size=4, rank_batch_size=16,
+                 bo_config=BOConfig(n_init=6, n_iter=12, n_candidates=128,
+                                    fit_steps=30, seed=9),
+                 seed=9, db_path=str(tmp_path / "db.jsonl"))
+    res = s.tune()
+    assert res.n_evaluations == 40 + 6 + 12 + 2
+    tags = {r.tag for r in EvalDB(str(tmp_path / "db.jsonl")).records}
+    assert tags == {"rank", "bo", "default", "expert"}
+    errs = res.final_space.validate(
+        {k: v for k, v in res.best_config.items()
+         if k in res.final_space.names})
+    assert errs == []

@@ -7,7 +7,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.costmodel import (MULTI_POD, SINGLE_POD, estimate,
@@ -164,8 +163,10 @@ class TestData:
         assert not np.array_equal(np.asarray(a["tokens"]),
                                   np.asarray(b["tokens"]))
 
-    @settings(max_examples=10, deadline=None)
-    @given(st.integers(0, 1000), st.integers(0, 1000))
+    # property test (was hypothesis @given): fixed draw of 10 (seed, step)s
+    @pytest.mark.parametrize(
+        "seed,step",
+        np.random.default_rng(11).integers(0, 1000, (10, 2)).tolist())
     def test_host_shards_partition(self, seed, step):
         """Property: per-host shards are disjoint slices of the global."""
         full = batch_at(seed, step, global_batch=4, seq_len=8,

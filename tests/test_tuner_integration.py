@@ -1,10 +1,9 @@
 """End-to-end SAPPHIRE integration (Fig. 3 pipeline) + roofline parser."""
 
-import numpy as np
 import pytest
 
 from repro.core.bo import BOConfig
-from repro.core.controller import Controller, EvalDB, EvalRecord
+from repro.core.controller import Controller, EvalDB
 from repro.core.tuner import Sapphire, expert_manual_config
 from repro.launch.roofline import analyze_hlo
 
