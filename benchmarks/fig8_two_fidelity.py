@@ -1,0 +1,131 @@
+"""Two-fidelity successive halving: analytic screen -> promoted validation.
+
+    PYTHONPATH=src python -m benchmarks.fig8_two_fidelity [--quick] [--compiled]
+
+The experiment the ask/tell redesign exists for: the Experiment Unit mixes
+evaluators of different fidelity inside one search.
+
+* **full-fidelity arm** — GP-BO driven by ``Controller.run`` entirely on
+  the HIGH-fidelity evaluator (the product cluster: noise-free multi-pod
+  analytic model by default, the real compiled dry-run with ``--compiled``);
+  every evaluation pays the expensive fidelity.
+* **two-fidelity arm** — ``Controller.run_successive_halving``: each round
+  asks a wide candidate batch, screens it on the CHEAP test-cluster
+  evaluator (analytic, the paper's ±2.5 % noise), and promotes only the
+  top scorers to the high-fidelity evaluator.  The strategy is told every
+  candidate (promoted ones at their high-fidelity value), so the GP still
+  learns from the whole screen.
+
+Acceptance: the two-fidelity arm spends <= 50 % of the full arm's
+high-fidelity evaluations and lands within the evaluator's noise (±5 %)
+of the full-fidelity best.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import save
+from repro.configs import get_config
+from repro.core import ranking
+from repro.core.controller import Controller, EvalDB
+from repro.core.costmodel import MULTI_POD, SINGLE_POD
+from repro.core.evaluators import AnalyticEvaluator, CompiledEvaluator
+from repro.core.knobs import clean_space
+from repro.core.strategy import BOConfig, make_strategy
+from repro.models.config import SHAPES_BY_NAME
+
+
+def run(quick: bool = False, arch: str = "yi-6b", shape: str = "train_4k",
+        compiled: bool = False, seed: int = 0):
+    cfg = get_config(arch)
+    cell = SHAPES_BY_NAME[shape]
+    space, _, _ = clean_space(cfg, cell, SINGLE_POD)
+
+    low = AnalyticEvaluator(cfg, cell, SINGLE_POD, noise_sigma=0.025,
+                            seed=seed)
+    if compiled:
+        high = CompiledEvaluator(cfg, cell)
+    else:
+        # product-cluster stand-in: the multi-pod analytic model, noise-free
+        high = AnalyticEvaluator(cfg, cell, MULTI_POD, noise_sigma=0.0)
+
+    # rank on the cheap fidelity (as Sapphire would), search the top-8
+    rk = ranking.rank(space, AnalyticEvaluator(cfg, cell, SINGLE_POD,
+                                               noise_sigma=0.025, seed=9),
+                      n_samples=80 if quick else 200, seed=9)
+    sub = rk.top_space(8)
+    _full = space.completer()      # non-top knobs pinned at defaults
+
+    # -- full-fidelity arm: every BO evaluation on the expensive evaluator --
+    n_init, n_iter = (6, 10) if quick else (8, 24)
+    full_db = EvalDB()
+    full_ctrl = Controller(high, full_db, tag="high").with_prepare(_full)
+    full_strat = make_strategy(
+        "bo", sub, cfg=BOConfig(n_init=n_init, n_iter=n_iter,
+                                n_candidates=512, fit_steps=80, seed=seed))
+    full_ctrl.run(full_strat)
+    best_full_sub, best_full = full_strat.best()
+    n_high_full = len(full_db)
+
+    # -- two-fidelity arm: analytic screen, promote top-k per round ----------
+    rounds, screen, promote = (4, 12, 2) if quick else (8, 16, 2)
+    sh_db = EvalDB()
+    sh_ctrl = Controller(low, sh_db).with_prepare(_full)
+    sh_strat = make_strategy(
+        "bo", sub,
+        cfg=BOConfig(n_init=screen, n_iter=(rounds - 1) * screen,
+                     batch_size=screen, warm_start=True,
+                     n_candidates=512, fit_steps=80, seed=seed))
+    high_ctrl = Controller(high, sh_db, "promote", prepare=_full)
+    best_sh_cfg, best_sh, schedule = sh_ctrl.run_successive_halving(
+        sh_strat, high_ctrl, rounds=rounds, screen=screen, promote=promote)
+    n_high_sh = sum(s["promoted"] for s in schedule)
+
+    # score both recommendations noise-free on the expensive fidelity
+    true_full = high.true_step(_full(best_full_sub))
+    true_sh = high.true_step(_full(best_sh_cfg))   # best promoted sub-config
+    rel = true_sh / true_full - 1.0
+    frac = n_high_sh / max(n_high_full, 1)
+
+    print(f"\n=== two-fidelity successive halving ({arch} × {shape}, "
+          f"high={'compiled' if compiled else 'multi-pod analytic'}) ===")
+    print(f"  full fidelity : best {true_full:.4f}s  "
+          f"high-fid evals {n_high_full}")
+    print(f"  two-fidelity  : best {true_sh:.4f}s  "
+          f"high-fid evals {n_high_sh}  "
+          f"(+{sum(s['screened'] for s in schedule)} cheap screens)")
+    print(f"  high-fid cost : {100 * frac:.0f}% of full "
+          f"({'PASS' if frac <= 0.5 else 'ABOVE'} the 50% target)")
+    print(f"  best delta    : {100 * rel:+.2f}% "
+          f"({'within' if abs(rel) <= 0.05 else 'OUTSIDE'} ±5% noise)")
+
+    payload = {
+        "arch": arch, "shape": shape, "seed": seed, "compiled": compiled,
+        "best_full": true_full, "best_sh": true_sh, "rel_delta": rel,
+        "high_evals_full": n_high_full, "high_evals_sh": n_high_sh,
+        "high_frac": frac,
+        "screens": sum(s["screened"] for s in schedule),
+        "schedule": [{"round": s["round"], "screened": s["screened"],
+                      "promoted": s["promoted"]} for s in schedule],
+    }
+    save("fig8_two_fidelity", payload)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--compiled", action="store_true",
+                    help="use the real compiled dry-run as the high "
+                         "fidelity (slow: one XLA compile per promotion)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    run(quick=args.quick, arch=args.arch, shape=args.shape,
+        compiled=args.compiled, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

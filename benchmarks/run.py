@@ -7,7 +7,8 @@ One module per paper table/figure (DESIGN.md §7):
   table2 top-16 knob table
   fig7   top-64/32/16 tuning efficiency
   fig5   default vs expert vs SAPPHIRE (+ product-env transfer)
-  sec34  BO vs SA vs GA vs random
+  sec34  BO vs SA vs GA vs random (all via Controller.run)
+  fig8   two-fidelity successive halving (analytic screen -> promotion)
   roofline  §Roofline table from the dry-run artifacts
   perf_batch  batched vs sequential evaluation pipeline wall-clock
 """
@@ -22,8 +23,8 @@ import traceback
 from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig5_effectiveness, fig5b_compiled_transfer,
                         fig6_ranking, fig7_topk_efficiency,
-                        perf_batch_pipeline, roofline_table,
-                        sec34_optimizers, table2_top16)
+                        fig8_two_fidelity, perf_batch_pipeline,
+                        roofline_table, sec34_optimizers, table2_top16)
 
 MODULES = [
     ("fig2b_response_surface", fig2b_response_surface),
@@ -34,6 +35,7 @@ MODULES = [
     ("sec34_optimizers", sec34_optimizers),
     ("fig5_effectiveness", fig5_effectiveness),
     ("fig5b_compiled_transfer", fig5b_compiled_transfer),
+    ("fig8_two_fidelity", fig8_two_fidelity),
     ("roofline_table", roofline_table),
     ("perf_batch_pipeline", perf_batch_pipeline),
 ]

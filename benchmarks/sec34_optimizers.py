@@ -5,6 +5,11 @@ impl selection) with the paper's 2.5 % evaluation noise; scored by the
 NOISE-FREE value of each method's believed-best config — noise-robustness
 is exactly what separates GP-BO here (a noisy lucky probe fools methods
 that trust single observations).
+
+Every method is a registry :class:`SearchStrategy` driven through the one
+``Controller.run`` experiment loop — the comparison exercises the exact
+ask/tell plumbing ``Sapphire.tune()`` uses, and the per-method evaluation
+logs land in one tagged EvalDB.
 """
 
 from __future__ import annotations
@@ -13,11 +18,15 @@ import numpy as np
 
 from benchmarks.common import save
 from repro.configs import get_config
-from repro.core import bo, optimizers as opt, ranking
+from repro.core import ranking
+from repro.core.controller import Controller, EvalDB
 from repro.core.costmodel import SINGLE_POD
 from repro.core.evaluators import AnalyticEvaluator
 from repro.core.knobs import clean_space
+from repro.core.strategy import BOConfig, GAConfig, SAConfig, make_strategy
 from repro.models.config import SHAPES_BY_NAME
+
+METHODS = ("bo", "random", "sa", "ga")
 
 
 def run(quick: bool = False, arch: str = "yi-6b", shape: str = "prefill_32k"):
@@ -32,40 +41,36 @@ def run(quick: bool = False, arch: str = "yi-6b", shape: str = "prefill_32k"):
     rk = ranking.rank(space, ev0, n_samples=120 if quick else 300, seed=9)
     sub = rk.top_space(16)
     base = space.default_config()
+    _full = space.completer()      # non-top knobs pinned at defaults
 
-    results = {m: [] for m in ("bo", "random", "sa", "ga")}
+    results = {m: [] for m in METHODS}
     for seed in seeds:
         ev = AnalyticEvaluator(cfg, cell, SINGLE_POD, noise_sigma=0.025,
                                seed=seed)
-
-        def objective(c):
-            full = dict(base)
-            full.update(c)
-            return ev(space.project(full))
-
-        def truth(c):
-            full = dict(base)
-            full.update(c)
-            return ev.true_step(space.project(full))
-
-        b, _, _, _ = bo.minimize(objective, sub,
-                                 bo.BOConfig(n_init=8, n_iter=budget - 8,
-                                             n_candidates=512, fit_steps=80,
-                                             seed=seed))
-        results["bo"].append(truth(b))
-        r, _, _ = opt.random_search(objective, sub, budget, seed=seed)
-        results["random"].append(truth(r))
-        s, _, _ = opt.simulated_annealing(objective, sub, budget,
-                                          opt.SAConfig(seed=seed))
-        results["sa"].append(truth(s))
-        g, _, _ = opt.genetic_algorithm(objective, sub, budget,
-                                        opt.GAConfig(seed=seed))
-        results["ga"].append(truth(g))
+        db = EvalDB()
+        ctrl = Controller(ev, db).with_prepare(_full)
+        for method in METHODS:
+            kwargs = {"seed": seed, "budget": budget}
+            if method == "bo":
+                kwargs = {"cfg": BOConfig(n_init=8, n_iter=budget - 8,
+                                          n_candidates=512, fit_steps=80,
+                                          seed=seed)}
+            elif method == "sa":
+                kwargs["cfg"] = SAConfig(seed=seed)
+            elif method == "ga":
+                kwargs["cfg"] = GAConfig(seed=seed)
+            strat = make_strategy(method, sub, **kwargs)
+            ctrl.with_tag(method).run(strat)
+            best_sub, _ = strat.best()
+            results[method].append(ev.true_step(_full(best_sub)))
+        # every method's experiments share the one tagged DB
+        assert {r.tag for r in db.records} == set(METHODS)
 
     summary = {}
     default_t = AnalyticEvaluator(cfg, cell, SINGLE_POD, noise_sigma=0.0) \
         .true_step(space.project(base))
-    print(f"default (noise-free): {default_t:.4f}s   budget={budget} evals")
+    print(f"default (noise-free): {default_t:.4f}s   budget={budget} evals"
+          f"  (all methods via Controller.run)")
     for m, vals in results.items():
         mean = float(np.mean(vals))
         summary[m] = {"mean_step_s": mean, "runs": vals,

@@ -13,7 +13,7 @@ recommended config diff.
 import argparse
 import json
 
-from repro.core.bo import BOConfig
+from repro.core.strategy import BOConfig, strategy_names
 from repro.core.tuner import Sapphire
 
 
@@ -27,6 +27,8 @@ def main():
     ap.add_argument("--batch", type=int, default=8,
                     help="configs per Experiment-Unit round (q-batch BO + "
                          "chunked ranking); 1 = the paper's sequential loop")
+    ap.add_argument("--strategy", default="bo", choices=strategy_names(),
+                    help="search-stage strategy from the registry")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -35,6 +37,7 @@ def main():
         multi_pod=args.multi_pod,
         n_rank_samples=120 if args.quick else 300,
         batch_size=args.batch,
+        strategy=args.strategy,
         bo_config=BOConfig(n_init=8, n_iter=16 if args.quick else 48,
                            n_candidates=1024, fit_steps=100, seed=args.seed),
         seed=args.seed)

@@ -3,9 +3,18 @@
 Public API:
     Space / Knob / constraints    (§3.2  — repro.core.space, .constraints)
     lasso_path / rank             (§3.3  — repro.core.lasso, .ranking)
-    gp / bo.minimize              (§3.4  — repro.core.gp, .bo)
-    Sapphire(...).tune()          (Fig 3 — repro.core.tuner)
+    gp / SearchStrategy / make_strategy
+                                  (§3.4  — repro.core.gp, .strategy; the
+                                   ask/tell Search Unit.  bo.minimize and
+                                   optimizers.* are deprecated wrappers)
+    Controller.run / EvalDB       (Fig 3 — repro.core.controller; the
+                                   experiment loop, incl. two-fidelity
+                                   successive halving)
+    Sapphire(...).tune()          (Fig 3 — repro.core.tuner; rank ->
+                                   search -> validate stages)
 """
 
 from repro.core.space import Config, Knob, Space  # noqa: F401
+from repro.core.strategy import (SearchStrategy, Trace,  # noqa: F401
+                                 make_strategy, strategy_names)
 from repro.core.tuner import Sapphire, TuneResult  # noqa: F401

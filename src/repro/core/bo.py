@@ -1,128 +1,30 @@
-"""Bayesian optimization with GP surrogate + dynamic boundaries (§3.4, Fig 4).
+"""Bayesian optimization entry point (§3.4, Fig 4) — legacy wrapper.
 
-The Search Unit of the paper's experiment-driven loop, batch-first:
+.. deprecated::
+    The GP-BO loop now lives in :class:`repro.core.strategy.BOStrategy`
+    (ask/tell — it never calls an objective) and the evaluation loop in
+    :meth:`repro.core.controller.Controller.run`.  ``minimize`` survives
+    as a thin synchronous driver over the strategy so existing callers,
+    tests and benchmarks keep working; new code should compose a strategy
+    with a Controller instead::
 
-  1. evaluate an initial design (LHS over the clean domain) — as one
-     batch when the Experiment Unit can score configs concurrently;
-  2. fit the GP to all (config, metric) history — noise-tolerant, with
-     hyperparameters warm-started from the previous round;
-  3. select a *q-batch* of probes by constant-liar Expected Improvement:
-     pick the EI argmax over the candidate pool, fantasize its outcome at
-     the incumbent best (the "lie"), recondition the posterior (fixed
-     hyperparameters, one Cholesky), repeat q times — the lie zeroes EI
-     around chosen probes so the batch spreads instead of stacking;
-  4. if any chosen probe sits near a ``dynamic_bound`` edge, ENLARGE that
-     knob's boundary (paper Fig. 4) and re-encode history;
-  5. evaluate the batch, append it, repeat until the budget is exhausted.
+        ctrl = Controller(evaluator, EvalDB())
+        strategy = BOStrategy(space, BOConfig(...))
+        trace = ctrl.run(strategy)
 
-``batch_size=1`` reduces to the classic sequential loop (one probe per GP
-refit).  Works on any objective ``f(config) -> float`` (lower is better);
-pass ``f_batch`` to score a whole probe batch in one call (see
-``Controller.evaluate_batch``).
+``BOConfig`` and ``BOTrace`` are re-exported from ``repro.core.strategy``
+(where ``BOTrace`` is now the strategy-generic ``Trace``).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core import gp
-from repro.core.sampling import lhs_unit
 from repro.core.space import Config, Space
+from repro.core.strategy import (BOConfig, BOStrategy,  # noqa: F401
+                                 Trace)
 
-
-@dataclass
-class BOTrace:
-    configs: List[Config] = field(default_factory=list)
-    values: List[float] = field(default_factory=list)
-    best_values: List[float] = field(default_factory=list)   # running min
-    boundary_events: List[Tuple[int, str]] = field(default_factory=list)
-
-    @property
-    def best(self) -> Tuple[Config, float]:
-        i = int(np.argmin(self.values))
-        return self.configs[i], self.values[i]
-
-    def extend(self, configs: Sequence[Config], values: Sequence[float]):
-        for c, v in zip(configs, values):
-            self.configs.append(c)
-            self.values.append(float(v))
-            self.best_values.append(min(self.best_values[-1], float(v))
-                                    if self.best_values else float(v))
-
-
-@dataclass
-class BOConfig:
-    n_init: int = 8                 # initial LHS design
-    n_iter: int = 48                # BO evaluations after the design
-    batch_size: int = 1             # q: probes per GP refit (constant-liar
-                                    # q-EI); 1 = the classic sequential loop
-    n_candidates: int = 2048        # acquisition candidates per iteration
-    n_local: int = 256              # perturbations around the incumbent
-    local_sigma: float = 0.08
-    kernel: str = "matern52"
-    fit_steps: int = 150
-    fit_steps_warm: Optional[int] = None   # Adam steps on warm-started
-                                           # rounds (None: fit_steps // 3)
-    warm_start: bool = False        # reuse GP hyperparams across rounds.
-                                    # Off by default so sequential callers
-                                    # keep the paper's full refit-per-eval
-                                    # loop; Sapphire turns it on whenever
-                                    # batching is requested
-    acquisition: str = "ei"         # ei | ucb
-    log_objective: bool = True      # model log(y): heavy-tailed penalties
-                                    # (OOM probes) otherwise flatten the GP
-    fantasy: str = "liar"           # q-batch fantasy value: "liar"
-                                    # (constant liar at the incumbent best
-                                    # — matches the sequential optimum
-                                    # within noise on every seed tried) |
-                                    # "believer" (Kriging believer —
-                                    # posterior mean at the pick)
-    dynamic_boundary: bool = True
-    boundary_tol: float = 0.05
-    boundary_factor: float = 2.0
-    seed: int = 0
-
-
-def _acq(state, cand_u, best_y, cfg: BOConfig) -> np.ndarray:
-    if cfg.acquisition == "ei":
-        a = gp.expected_improvement(state, cand_u, best_y, cfg.kernel)
-    else:
-        a = gp.ucb(state, cand_u, cfg.kernel)
-    return np.array(a)      # writable copy (jax buffers are read-only)
-
-
-def _select_batch(state, cand: np.ndarray, best_y: float, q: int,
-                  cfg: BOConfig, x: np.ndarray, y: np.ndarray,
-                  pad_to: Optional[int]) -> List[np.ndarray]:
-    """Fantasized q-EI: argmax over the pool, fantasize the pick's
-    outcome, recondition the posterior (fixed hyperparams, one Cholesky),
-    repeat.  EI collapses at the fantasized probe — via the variance for
-    the Kriging believer, via the mean for the constant liar — so later
-    picks spread over the pool instead of stacking on the first argmax."""
-    cand32 = cand.astype(np.float32)
-    taken = np.zeros(len(cand), bool)
-    picks: List[np.ndarray] = []
-    x_aug, y_aug = x, y
-    for j in range(q):
-        a = _acq(state, cand32, best_y, cfg)
-        a[taken] = -np.inf
-        i = int(np.argmax(a))
-        taken[i] = True
-        picks.append(cand[i])
-        if j < q - 1:
-            if cfg.fantasy == "believer":
-                mu, _ = gp.predict(state, cand32[i][None], cfg.kernel)
-                lie = float(mu[0])
-            else:
-                lie = best_y
-            x_aug = np.vstack([x_aug, cand[i][None]])
-            y_aug = np.append(y_aug, lie)
-            state = gp.condition(state.params, x_aug, y_aug, cfg.kernel,
-                                 pad_to=pad_to)
-    return picks
+BOTrace = Trace     # legacy name
 
 
 def minimize(f: Callable[[Config], float], space: Space,
@@ -140,86 +42,22 @@ def minimize(f: Callable[[Config], float], space: Space,
     The returned space reflects any dynamic-boundary enlargements — the
     recommendation report includes the final domain, as the paper's Fig. 4
     experiment does.
+
+    Deprecated wrapper: drives a :class:`BOStrategy` synchronously —
+    ``ask`` the next probe batch, score it through ``f`` (or ``f_batch``
+    when batching is on), ``tell`` the results.
     """
     cfg = cfg or BOConfig()
-    rng = np.random.default_rng(cfg.seed)
-    trace = BOTrace()
     use_batch = cfg.batch_size > 1 and f_batch is not None
-
-    # -- initial design ------------------------------------------------------
-    init = list(init_configs or [])
-    need = max(cfg.n_init - len(init), 0)
-    if need:
-        init += space.decode_batch(lhs_unit(rng, need, len(space)))
-    init = space.project_batch(init)
-    if use_batch:
-        trace.extend(init, f_batch(init))
-    else:
-        trace.extend(init, [float(f(c)) for c in init])
-
-    # fix the padded GP shape for the whole run: every jit (fit scan,
-    # posterior build, EI) compiles once instead of once per size bucket
-    pad_to = gp._bucket(len(trace.configs) + cfg.n_iter)
-
-    # -- BO loop ---------------------------------------------------------------
-    params = None
-    evals_done = 0
-    while evals_done < cfg.n_iter:
-        # clamp: nonsense batch_size (<=0) degrades to sequential, and the
-        # last round never overshoots the evaluation budget
-        q = max(min(cfg.batch_size, cfg.n_iter - evals_done), 1)
-        x = space.encode_batch(trace.configs)
-        y = np.asarray(trace.values, np.float64)
-        if cfg.log_objective:
-            y = np.log(np.maximum(y, 1e-12))
-        steps = cfg.fit_steps
-        warm = None
-        if cfg.warm_start and params is not None:
-            warm = params
-            steps = (cfg.fit_steps_warm if cfg.fit_steps_warm is not None
-                     else max(cfg.fit_steps // 3, 20))
-        state = gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
-                       pad_to=pad_to)
-        params = state.params
-
-        # candidates: global LHS + Gaussian ball + per-knob incumbent
-        # mutations.  The Gaussian ball almost never crosses a bool /
-        # categorical decision boundary (σ=0.08 in unit space), so EI can
-        # sit in a basin forever without trying `tensor_parallel=False`;
-        # the axis sweeps make every single-knob move visible.
-        d = len(space)
-        cand = lhs_unit(rng, cfg.n_candidates, d)
-        inc = space.to_unit(trace.best[0])
-        local = np.clip(inc[None] + rng.normal(0, cfg.local_sigma,
-                                               (cfg.n_local, d)), 0, 1)
-        sweeps = []
-        for j in range(d):
-            for u in (0.0, 0.25, 0.5, 0.75, 1.0):
-                m = inc.copy()
-                m[j] = u
-                sweeps.append(m)
-        cand = np.vstack([cand, local, np.asarray(sweeps)])
-        best_y = float(np.min(y))
-        picks = _select_batch(state, cand, best_y, q, cfg, x, y, pad_to)
-        probes = space.decode_batch(np.stack(picks))
-
-        # -- dynamic boundary (paper Fig. 4), once over the whole batch ------
-        if cfg.dynamic_boundary:
-            near: List[str] = []
-            for probe in probes:
-                for n in space.near_boundary(probe, cfg.boundary_tol):
-                    if n not in near:
-                        near.append(n)
-            if near:
-                space = space.expand_boundaries(near, cfg.boundary_factor)
-                for n in near:
-                    trace.boundary_events.append((evals_done, n))
-
+    strat = BOStrategy(space, cfg, init_configs=init_configs)
+    while not strat.finished:
+        probes = strat.ask()
+        if not probes:
+            break
         if use_batch:
-            trace.extend(probes, f_batch(probes))
+            values = f_batch(probes)
         else:
-            trace.extend(probes, [float(f(c)) for c in probes])
-        evals_done += len(probes)
-
-    best_c, best_v = trace.best
-    return best_c, best_v, trace, space
+            values = [float(f(c)) for c in probes]
+        strat.tell(probes, values)
+    best_c, best_v = strat.best()
+    return best_c, best_v, strat.trace, strat.space

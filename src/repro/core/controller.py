@@ -1,9 +1,23 @@
-"""The SAPPHIRE Controller (paper Fig. 3).
+"""The SAPPHIRE Controller (paper Fig. 3) — the experiment loop.
 
 Owns the **evaluation database** (append-only JSONL, the paper's store of
-"all the system measurement results") and wires the Experiment Unit
-(an evaluator callable) to the Search Unit (one of the optimizers).  On a
-real fleet the controller additionally injects runtime-settable knobs
+"all the system measurement results") and drives any ask/tell
+:class:`~repro.core.strategy.SearchStrategy` against any evaluator:
+
+    ctrl = Controller(evaluator, EvalDB("evals.jsonl"), tag="bo")
+    trace = ctrl.run(make_strategy("bo", space, cfg=BOConfig(...)))
+
+:meth:`Controller.run` is the single synchronous loop every strategy goes
+through — probes are scored as whole batches (``evaluate_batch``), every
+batch is one tagged DB append, and an ``on_round`` hook fires after each
+round so a future async loop can overlap GP refits with in-flight batches.
+:meth:`Controller.run_successive_halving` adds the two-fidelity schedule:
+each round screens a wide candidate batch on this controller's cheap
+evaluator and promotes only the top scorers to a high-fidelity (compiled)
+validation — the strategy is told every candidate, promoted ones at their
+high-fidelity value.
+
+On a real fleet the controller additionally injects runtime-settable knobs
 without restart (``Knob.restart_required=False``) and schedules
 recompile/redeploy for the rest — recorded per evaluation so the
 recommendation report can state the application cost of the final config.
@@ -13,12 +27,16 @@ from __future__ import annotations
 
 import json
 import time
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.core.evaluators import evaluate_many
 from repro.core.space import Config, Space
+from repro.core.strategy import SearchStrategy, Trace
 
 
 @dataclass
@@ -36,19 +54,35 @@ class EvalDB:
         self.path = Path(path) if path else None
         self.records: List[EvalRecord] = []
         if self.path and self.path.exists():
-            for line in self.path.read_text().splitlines():
+            for i, line in enumerate(self.path.read_text().splitlines()):
                 if not line.strip():
                     continue
-                d = json.loads(line)
-                self.records.append(EvalRecord(d["config"], d["value"],
-                                               d.get("wall_s", 0.0),
-                                               d.get("tag", "")))
+                try:
+                    d = json.loads(line)
+                    rec = EvalRecord(
+                        {k: _json_safe(v) for k, v in d["config"].items()},
+                        float(d["value"]), float(d.get("wall_s", 0.0)),
+                        str(d.get("tag", "")))
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        ValueError):
+                    # a crashed writer leaves a truncated trailing line;
+                    # the rest of the log is still good history
+                    warnings.warn(f"EvalDB: skipping corrupt line {i + 1} "
+                                  f"of {self.path}")
+                    continue
+                self.records.append(rec)
+
+    @staticmethod
+    def _sanitize(rec: EvalRecord) -> EvalRecord:
+        """Normalize numpy scalars at append time so in-memory records,
+        the JSONL on disk, and reloaded records all compare equal."""
+        return EvalRecord({k: _json_safe(v) for k, v in rec.config.items()},
+                          float(_json_safe(rec.value)), rec.wall_s, rec.tag)
 
     @staticmethod
     def _line(rec: EvalRecord) -> str:
-        return json.dumps({"config": {k: _json_safe(v) for k, v
-                                      in rec.config.items()},
-                           "value": _json_safe(rec.value),
+        return json.dumps({"config": rec.config,
+                           "value": rec.value,
                            "wall_s": rec.wall_s,
                            "tag": rec.tag}) + "\n"
 
@@ -59,6 +93,7 @@ class EvalDB:
         """Record a whole evaluation batch: one list extend, one file
         append (a batched experiment is the unit of work, and on a fleet
         the JSONL write is a remote call worth amortizing)."""
+        recs = [self._sanitize(r) for r in recs]
         self.records.extend(recs)
         if self.path and recs:
             self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -74,7 +109,6 @@ class EvalDB:
 
 
 def _json_safe(v):
-    import numpy as np
     if isinstance(v, (np.integer,)):
         return int(v)
     if isinstance(v, (np.floating,)):
@@ -86,13 +120,22 @@ def _json_safe(v):
 
 @dataclass
 class Controller:
-    """Experiment Unit wrapper: evaluates configs, logs to the DB."""
+    """Experiment Unit driver: evaluates configs, logs to the DB, and runs
+    the ask/tell loop for any search strategy.
+
+    ``prepare`` (optional) maps a strategy-side config to the full config
+    the evaluator runs — e.g. expanding a top-K sub-config over pinned
+    defaults.  The *prepared* config is what the DB records, so the log
+    always holds runnable configurations.
+    """
 
     evaluate: Callable[[Config], float]
     db: EvalDB = field(default_factory=EvalDB)
     tag: str = ""
+    prepare: Optional[Callable[[Config], Config]] = None
 
     def __call__(self, cfg: Config) -> float:
+        cfg = self.prepare(cfg) if self.prepare else cfg
         t0 = time.monotonic()
         v = float(self.evaluate(cfg))
         self.db.append(EvalRecord(dict(cfg), v, time.monotonic() - t0,
@@ -104,6 +147,8 @@ class Controller:
         when it has one) and record it as one tagged DB append.  Each
         record's ``wall_s`` is the batch wall-clock amortized per config."""
         cfgs = [dict(c) for c in cfgs]
+        if self.prepare:
+            cfgs = [self.prepare(c) for c in cfgs]
         t0 = time.monotonic()
         vals = evaluate_many(self.evaluate, cfgs)
         wall = (time.monotonic() - t0) / max(len(cfgs), 1)
@@ -112,7 +157,110 @@ class Controller:
         return vals
 
     def with_tag(self, tag: str) -> "Controller":
-        return Controller(self.evaluate, self.db, tag)
+        return Controller(self.evaluate, self.db, tag, self.prepare)
+
+    def with_prepare(self, prepare: Callable[[Config], Config]) -> "Controller":
+        return Controller(self.evaluate, self.db, self.tag, prepare)
+
+    # ---- the experiment loop ------------------------------------------------
+
+    def run(self, strategy: SearchStrategy, budget: Optional[int] = None,
+            batch_size: Optional[int] = None,
+            on_round: Optional[Callable[[int, List[Config], List[float]],
+                                        None]] = None) -> Trace:
+        """Drive ``strategy`` to completion: ask a probe batch, score it,
+        tell the results, repeat until the strategy's budget is told (or
+        ``budget`` evaluations have been spent here, when given).
+
+        ``on_round(round_index, configs, values)`` fires after each tell —
+        the seam where a future async controller overlaps the next GP
+        refit with an in-flight Experiment-Unit batch (see ROADMAP).
+        """
+        spent = 0
+        rnd = 0
+        while not strategy.finished:
+            n = batch_size
+            remaining = None
+            if budget is not None:
+                remaining = budget - spent
+                if remaining <= 0:
+                    break
+                if n is not None:
+                    n = min(n, remaining)
+            cfgs = strategy.ask(n)
+            if not cfgs:
+                break
+            if remaining is not None and len(cfgs) > remaining:
+                # cap the spend without distorting the strategy's batch
+                # width: the final round is truncated, not re-asked
+                cfgs = cfgs[:remaining]
+            vals = self.evaluate_batch(cfgs)
+            strategy.tell(cfgs, vals)
+            spent += len(cfgs)
+            if on_round is not None:
+                on_round(rnd, cfgs, vals)
+            rnd += 1
+        return strategy.trace
+
+    def run_successive_halving(
+            self, strategy: SearchStrategy,
+            high: Union["Controller", Callable[[Config], float]],
+            rounds: int, screen: int, promote: int,
+            screen_tag: str = "screen", promote_tag: str = "promote",
+            on_round: Optional[Callable[[int, Dict], None]] = None,
+    ) -> Tuple[Config, float, List[Dict]]:
+        """Two-fidelity successive halving: per round, ask ``screen``
+        candidates, score them all on *this* controller's cheap evaluator
+        (the analytic test cluster), promote the ``promote`` best to the
+        ``high``-fidelity evaluator (the compiled product cluster), and
+        tell the strategy every candidate — promoted ones at their
+        high-fidelity value, the rest at their screen value (a cheap
+        multi-fidelity prior for the surrogate).
+
+        Returns ``(best_config, best_value, schedule)`` where best is over
+        *high-fidelity* measurements only and ``schedule`` records, per
+        round, what was screened and what was promoted.
+        """
+        if isinstance(high, Controller):
+            high_ctrl = high if high.tag else high.with_tag(promote_tag)
+        else:
+            # a bare evaluator inherits this controller's prepare hook —
+            # both fidelities must score the same completed config
+            high_ctrl = Controller(high, self.db, promote_tag, self.prepare)
+        screen_ctrl = self.with_tag(screen_tag)
+        best_c: Optional[Config] = None
+        best_v = float("inf")
+        schedule: List[Dict] = []
+        for rnd in range(rounds):
+            if strategy.finished:
+                break
+            cands = strategy.ask(screen)
+            if not cands:
+                break
+            screen_vals = screen_ctrl.evaluate_batch(cands)
+            order = np.argsort(screen_vals, kind="stable")
+            keep = [int(i) for i in order[:max(min(promote, len(cands)), 1)]]
+            promoted = [cands[i] for i in keep]
+            high_vals = high_ctrl.evaluate_batch(promoted)
+            vals = [float(v) for v in screen_vals]
+            for i, hv in zip(keep, high_vals):
+                vals[i] = float(hv)
+            strategy.tell(cands, vals)
+            for c, hv in zip(promoted, high_vals):
+                if float(hv) < best_v:
+                    best_c, best_v = dict(c), float(hv)
+            entry = {"round": rnd, "screened": len(cands),
+                     "promoted": len(promoted),
+                     "screen_values": [float(v) for v in screen_vals],
+                     "promoted_configs": [dict(c) for c in promoted],
+                     "high_values": [float(v) for v in high_vals]}
+            schedule.append(entry)
+            if on_round is not None:
+                on_round(rnd, entry)
+        if best_c is None:
+            raise RuntimeError("successive halving promoted nothing "
+                               "(strategy returned no candidates)")
+        return best_c, best_v, schedule
 
     def restart_cost(self, space: Space, old: Config, new: Config) -> int:
         """How many changed knobs force a restart/recompile (fleet cost)."""

@@ -155,6 +155,13 @@ class CompiledEvaluator:
         self._cache[key] = step
         return step
 
+    def true_step(self, knobs: Config) -> float:
+        """Noise-free objective — the compile path is deterministic, so
+        this is ``__call__`` (cache-served on repeats).  Exists so both
+        fidelities expose the same validation interface (the two-fidelity
+        successive-halving demo scores final configs through it)."""
+        return self(knobs)
+
     def evaluate_batch(self, configs: Sequence[Config]) -> np.ndarray:
         """Thread-pooled fallback: the compile path releases the GIL inside
         XLA, so distinct configs lower concurrently.  Cache hits and

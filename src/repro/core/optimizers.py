@@ -1,9 +1,17 @@
 """Black-box optimizer baselines the paper compares against BO (§3.4).
 
-* RandomSearch        — sanity floor;
-* SimulatedAnnealing  — memoryless Metropolis walk; the paper's critique is
+.. deprecated::
+    The algorithms now live in :mod:`repro.core.strategy` as ask/tell
+    strategies (:class:`RandomStrategy`, :class:`AnnealingStrategy`,
+    :class:`GeneticStrategy`) that never call an objective; these
+    functions survive as thin synchronous drivers so existing callers
+    keep working.  New code should drive a strategy through
+    :meth:`repro.core.controller.Controller.run`.
+
+* random_search       — sanity floor;
+* simulated_annealing — memoryless Metropolis walk; the paper's critique is
   exactly that it "does not learn from the old experience";
-* GeneticAlgorithm    — population evolution; the paper's critique is the
+* genetic_algorithm   — population evolution; the paper's critique is the
   measurement cost (a whole population per generation).
 
 All share the objective interface of ``bo.minimize`` (lower is better) and
@@ -13,118 +21,41 @@ plots them side by side under identical evaluation budgets and noise.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
-import numpy as np
-
-from repro.core.bo import BOTrace
-from repro.core.sampling import latin_hypercube, lhs_unit
 from repro.core.space import Config, Space
+from repro.core.strategy import (AnnealingStrategy, GAConfig,  # noqa: F401
+                                 GeneticStrategy, RandomStrategy, SAConfig,
+                                 SearchStrategy, Trace)
+
+BOTrace = Trace     # legacy name
+
+
+def _drive(strategy: SearchStrategy,
+           f: Callable[[Config], float]) -> Tuple[Config, float, Trace]:
+    """Synchronous closed loop: ask the strategy's preferred batch, score
+    each config through ``f``, tell, repeat until the budget is told."""
+    while not strategy.finished:
+        cfgs = strategy.ask()
+        if not cfgs:
+            break
+        strategy.tell(cfgs, [float(f(c)) for c in cfgs])
+    best_c, best_v = strategy.best()
+    return best_c, best_v, strategy.trace
 
 
 def random_search(f: Callable[[Config], float], space: Space, budget: int,
-                  seed: int = 0) -> Tuple[Config, float, BOTrace]:
-    trace = BOTrace()
-    for c in latin_hypercube(space, budget, seed=seed):
-        v = float(f(c))
-        trace.configs.append(c)
-        trace.values.append(v)
-        trace.best_values.append(min(trace.values))
-    best_c, best_v = trace.best
-    return best_c, best_v, trace
-
-
-@dataclass
-class SAConfig:
-    t0: float = 1.0           # initial temperature (in units of objective std)
-    cooling: float = 0.93     # geometric cooling per step
-    sigma: float = 0.12       # proposal stddev in unit cube
-    seed: int = 0
+                  seed: int = 0) -> Tuple[Config, float, Trace]:
+    return _drive(RandomStrategy(space, budget, seed=seed), f)
 
 
 def simulated_annealing(f: Callable[[Config], float], space: Space,
                         budget: int, cfg: Optional[SAConfig] = None
-                        ) -> Tuple[Config, float, BOTrace]:
-    cfg = cfg or SAConfig()
-    rng = np.random.default_rng(cfg.seed)
-    trace = BOTrace()
-
-    cur = space.project(space.default_config())
-    cur_v = float(f(cur))
-    trace.configs.append(cur)
-    trace.values.append(cur_v)
-    trace.best_values.append(cur_v)
-
-    t = cfg.t0
-    d = len(space)
-    for _ in range(budget - 1):
-        u = space.to_unit(cur)
-        prop_u = np.clip(u + rng.normal(0, cfg.sigma, d), 0, 1)
-        prop = space.from_unit(prop_u)
-        v = float(f(prop))
-        trace.configs.append(prop)
-        trace.values.append(v)
-        trace.best_values.append(min(trace.values))
-        # Metropolis accept on the *current* state only (no history — the
-        # paper's point about SA's unreliability under noise).
-        scale = max(np.std(trace.values), 1e-9)
-        if v < cur_v or rng.random() < np.exp(-(v - cur_v) / (t * scale)):
-            cur, cur_v = prop, v
-        t *= cfg.cooling
-    best_c, best_v = trace.best
-    return best_c, best_v, trace
-
-
-@dataclass
-class GAConfig:
-    population: int = 8
-    elite: int = 2
-    tournament: int = 3
-    crossover_p: float = 0.5
-    mutation_sigma: float = 0.1
-    mutation_p: float = 0.25
-    seed: int = 0
+                        ) -> Tuple[Config, float, Trace]:
+    return _drive(AnnealingStrategy(space, budget, cfg), f)
 
 
 def genetic_algorithm(f: Callable[[Config], float], space: Space,
                       budget: int, cfg: Optional[GAConfig] = None
-                      ) -> Tuple[Config, float, BOTrace]:
-    cfg = cfg or GAConfig()
-    rng = np.random.default_rng(cfg.seed)
-    trace = BOTrace()
-    d = len(space)
-
-    def eval_cfg(c: Config) -> float:
-        v = float(f(c))
-        trace.configs.append(c)
-        trace.values.append(v)
-        trace.best_values.append(min(trace.values))
-        return v
-
-    pop_u = lhs_unit(rng, cfg.population, d)
-    pop = [space.from_unit(u) for u in pop_u]
-    fit = [eval_cfg(c) for c in pop]
-
-    while len(trace.values) < budget:
-        order = np.argsort(fit)
-        new_pop: List[Config] = [pop[i] for i in order[:cfg.elite]]
-        while len(new_pop) < cfg.population:
-            def pick():
-                idx = rng.choice(len(pop), size=cfg.tournament, replace=False)
-                return pop[min(idx, key=lambda i: fit[i])]
-            a, b = space.to_unit(pick()), space.to_unit(pick())
-            mask = rng.random(d) < cfg.crossover_p
-            child = np.where(mask, a, b)
-            mut = rng.random(d) < cfg.mutation_p
-            child = np.clip(child + mut * rng.normal(0, cfg.mutation_sigma, d), 0, 1)
-            new_pop.append(space.from_unit(child))
-        pop = new_pop[:cfg.population]
-        fit = []
-        for c in pop:
-            if len(trace.values) >= budget:
-                fit.append(float("inf"))
-                continue
-            fit.append(eval_cfg(c))
-    best_c, best_v = trace.best
-    return best_c, best_v, trace
+                      ) -> Tuple[Config, float, Trace]:
+    return _drive(GeneticStrategy(space, budget, cfg), f)

@@ -16,7 +16,8 @@ the Fig.-6 benchmark can plot the drastic drop-off.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -24,6 +25,9 @@ from repro.core.evaluators import evaluate_many
 from repro.core.lasso import lasso_path, path_importance
 from repro.core.sampling import latin_hypercube
 from repro.core.space import Config, Space
+
+if TYPE_CHECKING:      # pragma: no cover - import cycle guard (controller
+    from repro.core.controller import Controller      # imports evaluators)
 
 
 # ---------------------------------------------------------------------------
@@ -161,3 +165,23 @@ def rank(space: Space, evaluate: Callable[[Config], float],
     order = np.argsort(-imp, kind="stable")
     return RankingResult(space, imp, order, fimp, fmap,
                          list(samples), list(values))
+
+
+def rank_with_controller(space: Space, controller: "Controller",
+                         n_samples: int = 300, seed: int = 0,
+                         batch_size: Optional[int] = None,
+                         strategy: str = "random",
+                         stability_rounds: int = 0) -> RankingResult:
+    """The §3.3 ranking stage as strategy + experiment loop: a design
+    strategy from the registry (LHS by default) is driven through
+    ``controller.run`` — every design batch is one tagged DB append —
+    and the resulting trace feeds the Lasso-path ranking.  The samples
+    and values are identical to :func:`rank` under the same seed (the
+    evaluator noise stream is indexed per evaluation, not per batch
+    shape)."""
+    from repro.core.strategy import make_strategy   # lazy: avoid cycle
+    strat = make_strategy(strategy, space, budget=n_samples, seed=seed,
+                          batch_size=batch_size)
+    trace = controller.run(strat)
+    return rank(space, None, samples=trace.configs, values=trace.values,
+                seed=seed, stability_rounds=stability_rounds)

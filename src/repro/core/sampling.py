@@ -13,7 +13,7 @@ space.  Two samplers:
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -41,3 +41,15 @@ def latin_hypercube(space: Space, n: int, seed: int = 0) -> List[Config]:
     rng = np.random.default_rng(seed)
     u = lhs_unit(rng, n, len(space))
     return space.decode_batch(u)
+
+
+def init_design(space: Space, n: int, rng: np.random.Generator,
+                init_configs: Optional[List[Config]] = None) -> List[Config]:
+    """The optimizer initial design: caller-supplied configs first (warm
+    starts, e.g. the incumbent production config), then LHS fill up to
+    ``n``.  Every returned config is projected onto the clean domain."""
+    init = list(init_configs or [])
+    need = max(n - len(init), 0)
+    if need:
+        init += space.decode_batch(lhs_unit(rng, need, len(space)))
+    return space.project_batch(init)

@@ -330,6 +330,36 @@ class Space:
     def default_config(self) -> Config:
         return {k.name: k.default for k in self.knobs}
 
+    def completer(self, base: Optional[Config] = None):
+        """Map a sub-space config onto this full space: start from
+        ``base`` (default: this space's defaults), overlay the given
+        knobs, project onto the clean domain.  The standard
+        ``Controller.prepare`` hook for top-K search — non-top knobs
+        stay pinned at their defaults inside every evaluation.
+
+        Projection clips to THIS space's bounds: when the search may
+        enlarge dynamic boundaries (paper Fig. 4), complete through
+        ``full.overlaid(strategy.space).completer()`` instead, so enlarged
+        probes reach the evaluator unclipped (see Sapphire.search_stage).
+        """
+        base_cfg = dict(base) if base is not None else self.default_config()
+
+        def complete(cfg: Config) -> Config:
+            full = dict(base_cfg)
+            full.update(cfg)
+            return self.project(full)
+        return complete
+
+    def overlaid(self, sub: "Space") -> "Space":
+        """This space with matching knobs replaced by ``sub``'s versions
+        — e.g. dynamic-boundary-enlarged top-K knobs, so projection
+        respects the enlarged bounds."""
+        sp = self
+        for k in sub.knobs:
+            if k.name in self.names:
+                sp = sp.with_knob(k)
+        return sp
+
     def project(self, cfg: Config) -> Config:
         """Clip to bounds, enforce gating (C3) and constraints (C4)."""
         out: Config = {}

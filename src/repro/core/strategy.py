@@ -1,0 +1,610 @@
+"""Ask/tell search strategies — the paper's Search Unit with control inverted.
+
+The paper's Fig. 3 separates the *Search Unit* (which configs to try next)
+from the *Experiment Unit* (how to measure them).  BestConfig (Zhu et al.,
+2017) and Magpie (Zhu et al., 2022) frame tuning the same way: a pluggable
+search algorithm behind a fixed experiment-driver interface.  This module
+is that interface:
+
+    strategy = make_strategy("bo", space, cfg=BOConfig(...))
+    while not strategy.finished:
+        probes = strategy.ask()          # never calls an objective
+        values = <measure probes however you like>
+        strategy.tell(probes, values)
+    best_config, best_value = strategy.best()
+
+A :class:`SearchStrategy` proposes configs (``ask``) and learns from
+results (``tell``) but *never* evaluates anything — the experiment loop
+(:meth:`repro.core.controller.Controller.run`) owns evaluation, batching,
+the evaluation DB, and fidelity scheduling.  ``tell`` accepts partial and
+out-of-order batches: an async controller may return results as workers
+finish, promote only a screened subset (successive halving), or inject
+observations the strategy never asked for (warm-start history) — injected
+observations extend the trace but do not consume the search budget.
+
+Four strategies re-express the previous closed-loop optimizers:
+
+* :class:`BOStrategy`     — GP-BO with constant-liar q-EI, warm-started
+  hyperparameters and dynamic boundary enlargement (paper §3.4, Fig. 4);
+* :class:`RandomStrategy` — LHS design (the sanity floor, and the ranking
+  phase's sampler);
+* :class:`AnnealingStrategy` — memoryless Metropolis walk (§3.4 critique);
+* :class:`GeneticStrategy`   — population evolution (§3.4 critique).
+
+Each reproduces the evaluation trace of its legacy closed-loop counterpart
+bit for bit under the same seed and batch schedule (guarded by
+``tests/test_strategy.py``); ``bo.minimize`` and the ``optimizers.py``
+functions survive as thin deprecated wrappers over these classes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.core import gp
+from repro.core.sampling import init_design, latin_hypercube, lhs_unit
+from repro.core.space import Config, Space
+
+
+# ---------------------------------------------------------------------------
+# the evaluation trace (shared by every strategy; formerly bo.BOTrace)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Trace:
+    configs: List[Config] = field(default_factory=list)
+    values: List[float] = field(default_factory=list)
+    best_values: List[float] = field(default_factory=list)   # running min
+    boundary_events: List[Tuple[int, str]] = field(default_factory=list)
+
+    @property
+    def best(self) -> Tuple[Config, float]:
+        i = int(np.argmin(self.values))
+        return self.configs[i], self.values[i]
+
+    def extend(self, configs: Sequence[Config], values: Sequence[float]):
+        for c, v in zip(configs, values):
+            self.configs.append(c)
+            self.values.append(float(v))
+            self.best_values.append(min(self.best_values[-1], float(v))
+                                    if self.best_values else float(v))
+
+
+# ---------------------------------------------------------------------------
+# strategy configs
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BOConfig:
+    n_init: int = 8                 # initial LHS design
+    n_iter: int = 48                # BO evaluations after the design
+    batch_size: int = 1             # q: probes per GP refit (constant-liar
+                                    # q-EI); 1 = the classic sequential loop
+    n_candidates: int = 2048        # acquisition candidates per iteration
+    n_local: int = 256              # perturbations around the incumbent
+    local_sigma: float = 0.08
+    kernel: str = "matern52"
+    fit_steps: int = 150
+    fit_steps_warm: Optional[int] = None   # Adam steps on warm-started
+                                           # rounds (None: fit_steps // 3)
+    warm_start: bool = False        # reuse GP hyperparams across rounds.
+                                    # Off by default so sequential callers
+                                    # keep the paper's full refit-per-eval
+                                    # loop; Sapphire turns it on whenever
+                                    # batching is requested
+    acquisition: str = "ei"         # ei | ucb
+    log_objective: bool = True      # model log(y): heavy-tailed penalties
+                                    # (OOM probes) otherwise flatten the GP
+    fantasy: str = "liar"           # q-batch fantasy value: "liar"
+                                    # (constant liar at the incumbent best
+                                    # — matches the sequential optimum
+                                    # within noise on every seed tried) |
+                                    # "believer" (Kriging believer —
+                                    # posterior mean at the pick)
+    dynamic_boundary: bool = True
+    boundary_tol: float = 0.05
+    boundary_factor: float = 2.0
+    seed: int = 0
+
+
+@dataclass
+class SAConfig:
+    t0: float = 1.0           # initial temperature (in units of objective std)
+    cooling: float = 0.93     # geometric cooling per step
+    sigma: float = 0.12       # proposal stddev in unit cube
+    seed: int = 0
+
+
+@dataclass
+class GAConfig:
+    population: int = 8
+    elite: int = 2
+    tournament: int = 3
+    crossover_p: float = 0.5
+    mutation_sigma: float = 0.1
+    mutation_p: float = 0.25
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class SearchStrategy(Protocol):
+    """What the experiment loop needs from a search algorithm."""
+
+    space: Space                 # current domain (BO may enlarge it)
+    trace: Trace                 # every observation told so far
+
+    @property
+    def finished(self) -> bool:  # search budget fully observed
+        ...
+
+    def ask(self, n: Optional[int] = None) -> List[Config]:
+        """Propose up to ``n`` configs to evaluate (``None``: the
+        strategy's preferred batch).  May return fewer — or ``[]`` when
+        the budget is exhausted or the strategy is blocked on ``tell``."""
+        ...
+
+    def tell(self, configs: Sequence[Config],
+             values: Sequence[float]) -> None:
+        """Report results.  Partial batches, out-of-order results and
+        never-asked (injected) observations are all accepted."""
+        ...
+
+    def best(self) -> Tuple[Config, float]:
+        ...
+
+
+class _StrategyBase:
+    """Trace + pending-probe bookkeeping shared by every strategy."""
+
+    def __init__(self, space: Space):
+        self.space = space
+        self.trace = Trace()
+        self._pending: List[Config] = []
+
+    def best(self) -> Tuple[Config, float]:
+        if not self.trace.values:
+            raise RuntimeError(f"{type(self).__name__}: no observations yet")
+        return self.trace.best
+
+    def _match_pending(self, cfg: Config) -> bool:
+        try:
+            self._pending.remove(cfg)     # dict equality
+            return True
+        except ValueError:
+            return False
+
+
+# ---------------------------------------------------------------------------
+# GP-BO (paper §3.4, Fig. 4) as an ask/tell strategy
+# ---------------------------------------------------------------------------
+
+def _acq(state, cand_u, best_y, cfg: BOConfig) -> np.ndarray:
+    if cfg.acquisition == "ei":
+        a = gp.expected_improvement(state, cand_u, best_y, cfg.kernel)
+    else:
+        a = gp.ucb(state, cand_u, cfg.kernel)
+    return np.array(a)      # writable copy (jax buffers are read-only)
+
+
+def _select_batch(state, cand: np.ndarray, best_y: float, q: int,
+                  cfg: BOConfig, x: np.ndarray, y: np.ndarray,
+                  pad_to: Optional[int]) -> List[np.ndarray]:
+    """Fantasized q-EI: argmax over the pool, fantasize the pick's
+    outcome, recondition the posterior (fixed hyperparams, one Cholesky),
+    repeat.  EI collapses at the fantasized probe — via the variance for
+    the Kriging believer, via the mean for the constant liar — so later
+    picks spread over the pool instead of stacking on the first argmax."""
+    cand32 = cand.astype(np.float32)
+    taken = np.zeros(len(cand), bool)
+    picks: List[np.ndarray] = []
+    x_aug, y_aug = x, y
+    for j in range(q):
+        a = _acq(state, cand32, best_y, cfg)
+        a[taken] = -np.inf
+        i = int(np.argmax(a))
+        taken[i] = True
+        picks.append(cand[i])
+        if j < q - 1:
+            if cfg.fantasy == "believer":
+                mu, _ = gp.predict(state, cand32[i][None], cfg.kernel)
+                lie = float(mu[0])
+            else:
+                lie = best_y
+            x_aug = np.vstack([x_aug, cand[i][None]])
+            y_aug = np.append(y_aug, lie)
+            state = gp.condition(state.params, x_aug, y_aug, cfg.kernel,
+                                 pad_to=pad_to)
+    return picks
+
+
+class BOStrategy(_StrategyBase):
+    """GP surrogate + dynamic boundaries, inverted into ask/tell.
+
+    ``ask`` serves the initial LHS design first, then per round: fit the
+    GP to the whole trace (hyperparameters warm-started when configured),
+    select a constant-liar q-EI batch, enlarge any ``dynamic_bound``
+    boundary a probe is near (paper Fig. 4), and return the probes.
+    ``cfg.n_iter`` counts evaluations after the design, so the experiment
+    budget is identical for every batch width; asked-but-untold probes
+    count against the budget so an async driver cannot overshoot it.
+    """
+
+    def __init__(self, space: Space, cfg: Optional[BOConfig] = None,
+                 init_configs: Optional[List[Config]] = None):
+        super().__init__(space)
+        self.cfg = cfg or BOConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self._init_queue = init_design(space, self.cfg.n_init, self.rng,
+                                       init_configs)
+        self._n_init = len(self._init_queue)
+        self._pending_init: List[Config] = []
+        self._params = None                  # warm-start carry
+        self._pad_to: Optional[int] = None   # budget-pinned jit shape
+        self._evals_done = 0                 # told post-init evaluations
+
+    @property
+    def finished(self) -> bool:
+        return (not self._init_queue and not self._pending_init
+                and self._evals_done >= self.cfg.n_iter)
+
+    def ask(self, n: Optional[int] = None) -> List[Config]:
+        # -- initial design ---------------------------------------------------
+        if self._init_queue:
+            k = len(self._init_queue) if n is None \
+                else max(min(n, len(self._init_queue)), 1)
+            chunk, self._init_queue = (self._init_queue[:k],
+                                       self._init_queue[k:])
+            out = [dict(c) for c in chunk]
+            self._pending_init += [dict(c) for c in out]
+            return out
+        if not self.trace.values:
+            return []                        # blocked: nothing observed yet
+
+        # -- one BO round -----------------------------------------------------
+        remaining = self.cfg.n_iter - self._evals_done - len(self._pending)
+        if remaining <= 0:
+            return []
+        q = max(min(n if n is not None else self.cfg.batch_size,
+                    remaining), 1)
+        if self._pad_to is None:
+            # fix the padded GP shape for the whole run: every jit (fit
+            # scan, posterior build, EI) compiles once, not per size bucket
+            self._pad_to = gp._bucket(self._n_init + self.cfg.n_iter)
+        cfg = self.cfg
+        x = self.space.encode_batch(self.trace.configs)
+        y = np.asarray(self.trace.values, np.float64)
+        if cfg.log_objective:
+            y = np.log(np.maximum(y, 1e-12))
+        steps = cfg.fit_steps
+        warm = None
+        if cfg.warm_start and self._params is not None:
+            warm = self._params
+            steps = (cfg.fit_steps_warm if cfg.fit_steps_warm is not None
+                     else max(cfg.fit_steps // 3, 20))
+        state = gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
+                       pad_to=self._pad_to)
+        self._params = state.params
+
+        # candidates: global LHS + Gaussian ball + per-knob incumbent
+        # mutations.  The Gaussian ball almost never crosses a bool /
+        # categorical decision boundary (σ=0.08 in unit space), so EI can
+        # sit in a basin forever without trying `tensor_parallel=False`;
+        # the axis sweeps make every single-knob move visible.
+        d = len(self.space)
+        cand = lhs_unit(self.rng, cfg.n_candidates, d)
+        inc = self.space.to_unit(self.trace.best[0])
+        local = np.clip(inc[None] + self.rng.normal(0, cfg.local_sigma,
+                                                    (cfg.n_local, d)), 0, 1)
+        sweeps = []
+        for j in range(d):
+            for u in (0.0, 0.25, 0.5, 0.75, 1.0):
+                m = inc.copy()
+                m[j] = u
+                sweeps.append(m)
+        cand = np.vstack([cand, local, np.asarray(sweeps)])
+        best_y = float(np.min(y))
+        picks = _select_batch(state, cand, best_y, q, cfg, x, y,
+                              self._pad_to)
+        probes = self.space.decode_batch(np.stack(picks))
+
+        # -- dynamic boundary (paper Fig. 4), once over the whole batch -------
+        if cfg.dynamic_boundary:
+            near: List[str] = []
+            for probe in probes:
+                for name in self.space.near_boundary(probe, cfg.boundary_tol):
+                    if name not in near:
+                        near.append(name)
+            if near:
+                self.space = self.space.expand_boundaries(
+                    near, cfg.boundary_factor)
+                at = self._evals_done + len(self._pending)
+                for name in near:
+                    self.trace.boundary_events.append((at, name))
+
+        self._pending += [dict(c) for c in probes]
+        return probes
+
+    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+        configs = [dict(c) for c in configs]
+        self.trace.extend(configs, values)
+        for c in configs:
+            if c in self._pending_init:
+                self._pending_init.remove(c)
+            elif self._match_pending(c):
+                self._evals_done += 1
+            # else: injected observation — free information, no budget
+
+
+# ---------------------------------------------------------------------------
+# baselines (paper §3.4) as ask/tell strategies
+# ---------------------------------------------------------------------------
+
+class RandomStrategy(_StrategyBase):
+    """LHS design.  With a ``budget`` the whole stratified design is fixed
+    up front (identical to ``sampling.latin_hypercube``); with
+    ``budget=None`` the strategy is endless — each ask draws a fresh LHS
+    chunk, and the driver owns termination (successive-halving screens)."""
+
+    def __init__(self, space: Space, budget: Optional[int] = None,
+                 seed: int = 0, batch_size: Optional[int] = None):
+        super().__init__(space)
+        self.budget = budget
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self._queue: List[Config] = (latin_hypercube(space, budget, seed=seed)
+                                     if budget else [])
+        self._told = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.budget is not None and self._told >= self.budget
+
+    def ask(self, n: Optional[int] = None) -> List[Config]:
+        if self.budget is not None:
+            if not self._queue:
+                return []
+            k = n if n is not None else (self.batch_size or len(self._queue))
+            k = max(min(k, len(self._queue)), 1)
+            chunk, self._queue = self._queue[:k], self._queue[k:]
+        else:
+            k = n if n is not None else (self.batch_size or 1)
+            chunk = self.space.decode_batch(
+                lhs_unit(self.rng, k, len(self.space)))
+        out = [dict(c) for c in chunk]
+        self._pending += [dict(c) for c in out]
+        return out
+
+    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+        configs = [dict(c) for c in configs]
+        self.trace.extend(configs, values)
+        for c in configs:
+            if self._match_pending(c):
+                self._told += 1
+
+
+class AnnealingStrategy(_StrategyBase):
+    """Metropolis walk.  The accept/reject state advances in ``tell``; the
+    walk is memoryless (the paper's point about SA's unreliability under
+    noise), so ``ask(n > 1)`` simply proposes n independent perturbations
+    of the current state."""
+
+    def __init__(self, space: Space, budget: int,
+                 cfg: Optional[SAConfig] = None, seed: Optional[int] = None):
+        super().__init__(space)
+        self.cfg = cfg or SAConfig()
+        if cfg is None and seed is not None:
+            self.cfg = replace(self.cfg, seed=seed)
+        self.budget = budget
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self._cur: Optional[Config] = None
+        self._cur_v: Optional[float] = None
+        self._t = self.cfg.t0
+        self._asked_start = False
+        self._told = 0
+
+    @property
+    def finished(self) -> bool:
+        return self._told >= self.budget
+
+    def ask(self, n: Optional[int] = None) -> List[Config]:
+        remaining = self.budget - self._told - len(self._pending)
+        if remaining <= 0:
+            return []
+        k = min(n if n is not None else 1, remaining)
+        out: List[Config] = []
+        if not self._asked_start:
+            self._asked_start = True
+            out.append(self.space.project(self.space.default_config()))
+        anchor = self._cur or self.space.project(self.space.default_config())
+        d = len(self.space)
+        while len(out) < k:
+            u = self.space.to_unit(anchor)
+            prop_u = np.clip(u + self.rng.normal(0, self.cfg.sigma, d), 0, 1)
+            out.append(self.space.from_unit(prop_u))
+        out = [dict(c) for c in out]
+        self._pending += [dict(c) for c in out]
+        return out
+
+    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+        configs = [dict(c) for c in configs]
+        self.trace.extend(configs, values)
+        for c, v in zip(configs, values):
+            if not self._match_pending(c):
+                continue                     # injected observation
+            v = float(v)
+            self._told += 1
+            if self._cur is None:            # the starting point
+                self._cur, self._cur_v = dict(c), v
+                continue
+            # Metropolis accept on the *current* state only (no history)
+            scale = max(float(np.std(self.trace.values)), 1e-9)
+            if (v < self._cur_v
+                    or self.rng.random() < np.exp(-(v - self._cur_v)
+                                                  / (self._t * scale))):
+                self._cur, self._cur_v = dict(c), v
+            self._t *= self.cfg.cooling
+
+
+class GeneticStrategy(_StrategyBase):
+    """Population evolution.  ``ask`` hands out the un-scored members of
+    the current generation; once the generation is fully told, the next
+    one is bred (elitism + tournament + uniform crossover + Gaussian
+    mutation).  The measurement cost — a whole population per generation —
+    is the paper's critique, visible here as large mandatory asks."""
+
+    def __init__(self, space: Space, budget: int,
+                 cfg: Optional[GAConfig] = None, seed: Optional[int] = None):
+        super().__init__(space)
+        self.cfg = cfg or GAConfig()
+        if cfg is None and seed is not None:
+            self.cfg = replace(self.cfg, seed=seed)
+        self.budget = budget
+        self.rng = np.random.default_rng(self.cfg.seed)
+        d = len(space)
+        pop_u = lhs_unit(self.rng, self.cfg.population, d)
+        self._pop: List[Config] = [space.from_unit(u) for u in pop_u]
+        self._fit: List[Optional[float]] = [None] * len(self._pop)
+        self._queue: List[int] = list(range(len(self._pop)))
+        self._pending_idx: List[Tuple[int, Config]] = []
+        self._init_gen = True
+        self._told = 0
+
+    @property
+    def finished(self) -> bool:
+        return self._told >= self.budget
+
+    def ask(self, n: Optional[int] = None) -> List[Config]:
+        if self.finished:
+            return []
+        self._maybe_evolve()
+        if not self._queue:
+            return []                        # blocked on tells
+        k = len(self._queue) if n is None else max(min(n, len(self._queue)), 1)
+        if not self._init_gen:
+            # the initial population is always scored in full (as the
+            # legacy loop did); later generations respect the budget
+            remaining = self.budget - self._told - len(self._pending_idx)
+            if remaining <= 0:
+                return []
+            k = min(k, remaining)
+        idxs, self._queue = self._queue[:k], self._queue[k:]
+        out: List[Config] = []
+        for i in idxs:
+            c = dict(self._pop[i])
+            self._pending_idx.append((i, dict(c)))
+            out.append(c)
+        return out
+
+    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+        configs = [dict(c) for c in configs]
+        self.trace.extend(configs, values)
+        for c, v in zip(configs, values):
+            for j, (i, pc) in enumerate(self._pending_idx):
+                if pc == c:
+                    self._pending_idx.pop(j)
+                    self._fit[i] = float(v)
+                    self._told += 1
+                    break
+        self._maybe_evolve()
+
+    def _maybe_evolve(self):
+        if (self._queue or self._pending_idx
+                or any(f is None for f in self._fit)
+                or self._told >= self.budget):
+            return
+        cfg, rng, pop, fit = self.cfg, self.rng, self._pop, self._fit
+        d = len(self.space)
+        order = np.argsort(fit)
+        new_pop: List[Config] = [pop[i] for i in order[:cfg.elite]]
+        while len(new_pop) < cfg.population:
+            def pick():
+                idx = rng.choice(len(pop), size=cfg.tournament, replace=False)
+                return pop[min(idx, key=lambda i: fit[i])]
+            a, b = self.space.to_unit(pick()), self.space.to_unit(pick())
+            mask = rng.random(d) < cfg.crossover_p
+            child = np.where(mask, a, b)
+            mut = rng.random(d) < cfg.mutation_p
+            child = np.clip(child + mut * rng.normal(0, cfg.mutation_sigma, d),
+                            0, 1)
+            new_pop.append(self.space.from_unit(child))
+        self._pop = new_pop[:cfg.population]
+        self._fit = [None] * len(self._pop)
+        self._queue = list(range(len(self._pop)))
+        self._init_gen = False
+
+
+# ---------------------------------------------------------------------------
+# registry: strategies by name (what Sapphire stages and benchmarks use)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., SearchStrategy]] = {}
+
+
+def register_strategy(name: str):
+    """Register a strategy factory ``f(space, **kwargs) -> SearchStrategy``
+    under ``name``.  Factories must tolerate (ignore) the common kwargs
+    ``seed``, ``budget`` and ``batch_size`` so callers can stay generic."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def strategy_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_strategy(name: str, space: Space, **kwargs) -> SearchStrategy:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"registered: {strategy_names()}") from None
+    return factory(space, **kwargs)
+
+
+@register_strategy("bo")
+def _make_bo(space: Space, cfg: Optional[BOConfig] = None,
+             budget: Optional[int] = None, seed: Optional[int] = None,
+             batch_size: Optional[int] = None,
+             init_configs: Optional[List[Config]] = None, **_) -> BOStrategy:
+    if cfg is None:
+        cfg = BOConfig(seed=seed if seed is not None else 0)
+    if budget is not None:
+        # a budget below the design size shrinks the design too, so the
+        # strategy never spends more evaluations than asked for
+        n_init = min(cfg.n_init, budget)
+        cfg = replace(cfg, n_init=n_init, n_iter=budget - n_init)
+    if batch_size is not None:
+        cfg = replace(cfg, batch_size=batch_size, warm_start=True)
+    return BOStrategy(space, cfg, init_configs=init_configs)
+
+
+@register_strategy("random")
+def _make_random(space: Space, budget: Optional[int] = None, seed: int = 0,
+                 batch_size: Optional[int] = None, **_) -> RandomStrategy:
+    return RandomStrategy(space, budget,
+                          seed=seed if seed is not None else 0,
+                          batch_size=batch_size)
+
+
+@register_strategy("sa")
+def _make_sa(space: Space, budget: int = 48,
+             cfg: Optional[SAConfig] = None,
+             seed: Optional[int] = None, **_) -> AnnealingStrategy:
+    return AnnealingStrategy(space, budget, cfg, seed=seed)
+
+
+@register_strategy("ga")
+def _make_ga(space: Space, budget: int = 48,
+             cfg: Optional[GAConfig] = None,
+             seed: Optional[int] = None, **_) -> GeneticStrategy:
+    return GeneticStrategy(space, budget, cfg, seed=seed)

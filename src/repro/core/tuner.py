@@ -2,30 +2,35 @@
 
     result = Sapphire(arch="yi-6b", shape="train_4k").tune()
 
-runs the full pipeline:
+``tune()`` is three composable stages, each driving a registry strategy
+through the experiment-loop Controller:
 
-  1. build the raw knob space for (arch × shape × mesh);
-  2. §3.2 constraint resolution  -> clean domain;
-  3. §3.3 ranking: ~300 LHS samples on the test-cluster evaluator,
-     Lasso-path importance, keep top-K knobs (others pinned to default);
-  4. §3.4 GP-BO with dynamic boundaries over the top-K sub-space;
-  5. report: recommended config (merged with pins/defaults), improvement
-     over the default and over an "expert manual" config, the tuning
-     trace, and — optionally — the product-cluster (compiled) validation.
+  1. **rank**   (§3.3) — an LHS design strategy scored on the test-cluster
+     evaluator, Lasso-path importance, keep top-K knobs (others pinned);
+  2. **search** (§3.4) — any registered strategy (GP-BO with dynamic
+     boundaries by default; ``strategy="sa"|"ga"|"random"`` for the
+     baselines) over the top-K sub-space, probes expanded to full configs
+     by the Controller's ``prepare`` hook;
+  3. **validate** — probe the default and "expert manual" baseline configs
+     and assemble the report (recommended config, improvement, trace).
+
+The stages are ordinary methods taking a Controller, so callers can rerun
+any one of them against a different evaluator or database — e.g. re-rank
+an existing EvalDB, or validate on the compiled product cluster.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.configs import get_config
-from repro.core import bo, knobs as knobmod, ranking
-from repro.core.bo import BOConfig, BOTrace
+from repro.core import knobs as knobmod, ranking
 from repro.core.controller import Controller, EvalDB
 from repro.core.costmodel import MULTI_POD, SINGLE_POD, MeshShape
 from repro.core.evaluators import AnalyticEvaluator
 from repro.core.space import Config, Space
+from repro.core.strategy import BOConfig, Trace, make_strategy
 from repro.models.config import SHAPES_BY_NAME
 
 
@@ -63,9 +68,11 @@ class TuneResult:
     best_value: float
     default_value: float
     expert_value: float
-    trace: BOTrace
+    trace: Trace
     final_space: Space             # after dynamic-boundary enlargements
-    n_evaluations: int
+    n_evaluations: int             # tuning evaluations only (rank + search;
+                                   # the default/expert baseline probes are
+                                   # report overhead, not search budget)
 
     @property
     def speedup_vs_default(self) -> float:
@@ -103,6 +110,7 @@ class Sapphire:
                                    # 1 = the paper's sequential loop
     rank_batch_size: Optional[int] = None  # ranking chunk (None: 64 when
                                            # batching, else sequential)
+    strategy: str = "bo"           # search-stage strategy (registry name)
     bo_config: Optional[BOConfig] = None
     pinned: Optional[Dict[str, object]] = None
     noise_sigma: float = 0.025
@@ -122,32 +130,26 @@ class Sapphire:
         ctrl = Controller(ev, EvalDB(self.db_path))
         return model_cfg, cell, mesh, space, pins, report, ctrl
 
-    def tune(self) -> TuneResult:
-        model_cfg, cell, mesh, space, pins, report, ctrl = self._setup()
+    # ---- stage 1: §3.3 ranking over the clean domain ------------------------
 
-        # ---- §3.3 ranking over the clean domain --------------------------
+    def rank_stage(self, ctrl: Controller, space: Space,
+                   strategy: str = "random") -> ranking.RankingResult:
         rank_bs = self.rank_batch_size
         if rank_bs is None:
             rank_bs = 64 if self.batch_size > 1 else 1
-        rk = ranking.rank(space, ctrl.with_tag("rank"),
-                          n_samples=self.n_rank_samples, seed=self.seed,
-                          batch_size=rank_bs)
+        return ranking.rank_with_controller(
+            space, ctrl.with_tag("rank"), n_samples=self.n_rank_samples,
+            seed=self.seed, batch_size=rank_bs, strategy=strategy)
+
+    # ---- stage 2: §3.4 search over the top-K sub-space -----------------------
+
+    def search_stage(self, ctrl: Controller, space: Space,
+                     rk: ranking.RankingResult, strategy: Optional[str] = None
+                     ) -> Tuple[Config, float, Trace, Space]:
+        """Drive the named registry strategy over the top-K sub-space.
+        Returns (best full config, best value, trace, final sub-space)."""
+        strategy = strategy or self.strategy
         sub = rk.top_space(self.top_k)
-
-        # non-top knobs are pinned at their defaults inside the objective
-        base = space.default_config()
-        bo_ctrl = ctrl.with_tag("bo")
-
-        def _full(sub_cfg: Config) -> Config:
-            full = dict(base)
-            full.update(sub_cfg)
-            return space.project(full)
-
-        def objective(sub_cfg: Config) -> float:
-            return bo_ctrl(_full(sub_cfg))
-
-        def objective_batch(sub_cfgs: Sequence[Config]) -> List[float]:
-            return bo_ctrl.evaluate_batch([_full(c) for c in sub_cfgs])
 
         bo_cfg = self.bo_config or BOConfig(seed=self.seed)
         if self.batch_size != 1:
@@ -155,19 +157,58 @@ class Sapphire:
             # AND warm-started GP hyperparameters across rounds
             bo_cfg = replace(bo_cfg, batch_size=self.batch_size,
                              warm_start=True)
-        best_sub, best_v, trace, final_sub = bo.minimize(
-            objective, sub, bo_cfg, f_batch=objective_batch)
+        if strategy == "bo":
+            strat = make_strategy("bo", sub, cfg=bo_cfg)
+        else:
+            # non-BO strategies get the same evaluation budget and the
+            # same configs-per-round as the BO loop would
+            strat = make_strategy(strategy, sub, seed=self.seed,
+                                  budget=bo_cfg.n_init + bo_cfg.n_iter,
+                                  batch_size=self.batch_size)
 
-        best_full = dict(base)
-        best_full.update(best_sub)
-        best_full = space.project(best_full)
-        best_full.update(pins)
+        # non-top knobs are pinned at their defaults inside the evaluator.
+        # The completer follows the strategy's live space: when a dynamic
+        # boundary is enlarged (paper Fig. 4), the enlarged probes must
+        # reach the evaluator unclipped.
+        _cache: Dict[str, object] = {}
 
-        # ---- baselines ----------------------------------------------------
+        def _full(sub_cfg: Config) -> Config:
+            if _cache.get("sub") is not strat.space:
+                _cache["sub"] = strat.space
+                _cache["complete"] = space.overlaid(strat.space).completer()
+            return _cache["complete"](sub_cfg)
+
+        search_ctrl = ctrl.with_tag(strategy).with_prepare(_full)
+        trace = search_ctrl.run(
+            strat, batch_size=None if strategy == "bo" else self.batch_size)
+        best_sub, best_v = strat.best()
+        return _full(best_sub), best_v, trace, strat.space
+
+    # ---- stage 3: baseline probes + report -----------------------------------
+
+    def validate_stage(self, ctrl: Controller,
+                       space: Space) -> Tuple[float, float]:
+        """Probe the default and expert-manual baselines (tagged, so they
+        never count toward the reported tuning budget)."""
         defaults = space.project(space.default_config())
         expert = expert_manual_config(space)
         dv = ctrl.with_tag("default")(defaults)
         ev_ = ctrl.with_tag("expert")(expert)
+        return dv, ev_
+
+    # ---- the pipeline --------------------------------------------------------
+
+    def tune(self) -> TuneResult:
+        model_cfg, cell, mesh, space, pins, report, ctrl = self._setup()
+        n_preexisting = len(ctrl.db)           # warm-started DBs reload here
+
+        rk = self.rank_stage(ctrl, space)
+        best_full, best_v, trace, final_sub = self.search_stage(
+            ctrl, space, rk)
+        best_full = dict(best_full)
+        best_full.update(pins)
+        n_evals = len(ctrl.db) - n_preexisting  # rank + search only
+        dv, ev_ = self.validate_stage(ctrl, space)
 
         return TuneResult(
             arch=self.arch, shape=self.shape, mesh=mesh,
@@ -175,5 +216,5 @@ class Sapphire:
             best_config=best_full, best_value=best_v,
             default_value=dv, expert_value=ev_,
             trace=trace, final_space=final_sub,
-            n_evaluations=len(ctrl.db),
+            n_evaluations=n_evals,
         )

@@ -1,0 +1,393 @@
+"""Ask/tell SearchStrategy protocol: legacy equivalence, partial tells,
+the Controller experiment loop, successive halving, EvalDB hardening."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import bo, optimizers as opt
+from repro.core.controller import Controller, EvalDB
+from repro.core.space import Knob, Space
+from repro.core.strategy import (AnnealingStrategy, BOConfig, BOStrategy,
+                                 GAConfig, GeneticStrategy, RandomStrategy,
+                                 SAConfig, SearchStrategy, make_strategy,
+                                 strategy_names)
+
+
+def _space():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("k", "int", 4, lo=1, hi=16),
+                  Knob("c", "categorical", "a", choices=("a", "b", "c"))))
+
+
+def _f(c):
+    return ((c["x"] - 0.7) ** 2 + (c["y"] - 0.2) ** 2
+            + 0.01 * c["k"] + (0.3 if c["c"] == "b" else 0.0))
+
+
+def _drive(strategy, f):
+    while not strategy.finished:
+        cfgs = strategy.ask()
+        if not cfgs:
+            break
+        strategy.tell(cfgs, [float(f(c)) for c in cfgs])
+    return strategy
+
+
+def _assert_traces_equal(a, b):
+    assert a.configs == b.configs
+    assert np.allclose(a.values, b.values)
+    assert a.boundary_events == b.boundary_events
+
+
+# ---------------------------------------------------------------------------
+# strategy-vs-legacy equivalence: same seed => identical traces
+# ---------------------------------------------------------------------------
+
+class TestLegacyEquivalence:
+    @pytest.mark.parametrize("q", [1, 3])
+    def test_bo(self, q):
+        cfg = BOConfig(n_init=4, n_iter=10, batch_size=q, n_candidates=64,
+                       fit_steps=20, seed=7)
+        _, _, legacy, legacy_space = bo.minimize(
+            _f, _space(), cfg, f_batch=lambda cs: [_f(c) for c in cs])
+        strat = _drive(BOStrategy(_space(), cfg), _f)
+        _assert_traces_equal(legacy, strat.trace)
+        assert legacy_space == strat.space
+
+    def test_bo_dynamic_boundary(self):
+        sp = Space((Knob("x", "float", 4.0, lo=1.0, hi=8.0, log_scale=True,
+                         dynamic_bound=True),))
+        f = lambda c: (c["x"] - 20.0) ** 2            # noqa: E731
+        cfg = BOConfig(n_init=4, n_iter=10, n_candidates=128, fit_steps=40,
+                       boundary_factor=3.0)
+        _, _, legacy, legacy_space = bo.minimize(f, sp, cfg)
+        strat = _drive(BOStrategy(sp, cfg), f)
+        _assert_traces_equal(legacy, strat.trace)
+        assert strat.trace.boundary_events            # expansions happened
+        assert legacy_space.knob("x").hi == strat.space.knob("x").hi
+
+    def test_random(self):
+        _, _, legacy = opt.random_search(_f, _space(), 20, seed=3)
+        strat = _drive(RandomStrategy(_space(), 20, seed=3), _f)
+        _assert_traces_equal(legacy, strat.trace)
+
+    def test_sa(self):
+        _, _, legacy = opt.simulated_annealing(_f, _space(), 20,
+                                               SAConfig(seed=3))
+        strat = _drive(AnnealingStrategy(_space(), 20, SAConfig(seed=3)), _f)
+        _assert_traces_equal(legacy, strat.trace)
+
+    def test_ga(self):
+        _, _, legacy = opt.genetic_algorithm(_f, _space(), 26,
+                                             GAConfig(seed=3))
+        strat = _drive(GeneticStrategy(_space(), 26, GAConfig(seed=3)), _f)
+        _assert_traces_equal(legacy, strat.trace)
+
+    def test_controller_run_matches_legacy_random(self):
+        """The experiment loop reproduces the legacy closed loop when the
+        evaluator is a plain callable (sequential fallback)."""
+        _, _, legacy = opt.random_search(_f, _space(), 16, seed=1)
+        ctrl = Controller(_f, EvalDB(), tag="r")
+        trace = ctrl.run(RandomStrategy(_space(), 16, seed=1))
+        _assert_traces_equal(legacy, trace)
+        assert [r.value for r in ctrl.db.records] == trace.values
+
+
+# ---------------------------------------------------------------------------
+# tell: partial batches, out-of-order results, injected observations
+# ---------------------------------------------------------------------------
+
+class TestTellSemantics:
+    def test_bo_partial_and_out_of_order(self):
+        cfg = BOConfig(n_init=4, n_iter=6, batch_size=3, n_candidates=32,
+                       fit_steps=10)
+        strat = BOStrategy(_space(), cfg)
+        init = strat.ask()
+        assert len(init) == 4
+        # init told in reversed halves
+        strat.tell(init[2:][::-1], [_f(c) for c in init[2:][::-1]])
+        strat.tell(init[:2], [_f(c) for c in init[:2]])
+        probes = strat.ask()
+        assert len(probes) == 3
+        # partial: two of three results arrive first
+        strat.tell(probes[1:], [_f(c) for c in probes[1:]])
+        assert not strat.finished
+        # the in-flight probe counts against the budget: 6 - 2 told - 1
+        more = strat.ask()
+        assert len(more) == 3
+        strat.tell(more, [_f(c) for c in more])
+        strat.tell(probes[:1], [_f(c) for c in probes[:1]])   # straggler
+        assert strat.finished
+        assert len(strat.trace.values) == 4 + 6
+
+    def test_bo_injected_observations_are_free(self):
+        cfg = BOConfig(n_init=2, n_iter=4, n_candidates=32, fit_steps=10)
+        strat = BOStrategy(_space(), cfg)
+        init = strat.ask()
+        strat.tell(init, [_f(c) for c in init])
+        # warm-start history the strategy never asked for
+        foreign = dict(_space().default_config())
+        strat.tell([foreign], [_f(foreign)])
+        told = 0
+        while not strat.finished:
+            ps = strat.ask()
+            strat.tell(ps, [_f(c) for c in ps])
+            told += len(ps)
+        assert told == 4                       # budget unaffected
+        assert len(strat.trace.values) == 2 + 1 + 4
+
+    def test_random_partial_tell(self):
+        strat = RandomStrategy(_space(), 10, seed=0, batch_size=10)
+        cfgs = strat.ask()
+        strat.tell(cfgs[5:], [_f(c) for c in cfgs[5:]])
+        assert not strat.finished
+        strat.tell(cfgs[:5], [_f(c) for c in cfgs[:5]])
+        assert strat.finished
+
+    def test_ga_out_of_order_generation(self):
+        strat = GeneticStrategy(_space(), 24, GAConfig(seed=0, population=6))
+        gen = strat.ask()
+        assert len(gen) == 6
+        order = [3, 0, 5, 1, 4, 2]
+        for i in order:                        # results arrive shuffled
+            strat.tell([gen[i]], [_f(gen[i])])
+        nxt = strat.ask()                      # evolution still triggers
+        assert nxt and len(strat.trace.values) == 6
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_names_and_protocol(self):
+        assert {"bo", "random", "sa", "ga"} <= set(strategy_names())
+        for name in ("bo", "random", "sa", "ga"):
+            s = make_strategy(name, _space(), budget=8, seed=0)
+            assert isinstance(s, SearchStrategy)
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError, match="unknown strategy"):
+            make_strategy("hillclimb", _space())
+
+    def test_budget_flows_through(self):
+        for name in ("random", "sa", "ga"):
+            s = _drive(make_strategy(name, _space(), budget=9, seed=1), _f)
+            assert len(s.trace.values) >= 9 and s.finished
+        s = _drive(make_strategy("bo", _space(), budget=9, seed=1,
+                                 cfg=BOConfig(n_init=3, n_candidates=32,
+                                              fit_steps=10)), _f)
+        assert len(s.trace.values) == 9        # n_init + (budget - n_init)
+
+    def test_bo_budget_below_design_shrinks_design(self):
+        s = _drive(make_strategy("bo", _space(), budget=4, seed=1,
+                                 cfg=BOConfig(n_init=8, n_candidates=32,
+                                              fit_steps=10)), _f)
+        assert len(s.trace.values) == 4 and s.finished
+
+
+# ---------------------------------------------------------------------------
+# Controller.run: budget cap + on_round hook
+# ---------------------------------------------------------------------------
+
+class TestControllerRun:
+    def test_on_round_hook_and_tags(self):
+        rounds = []
+        ctrl = Controller(_f, EvalDB(), tag="bo")
+        strat = BOStrategy(_space(), BOConfig(n_init=4, n_iter=8,
+                                              batch_size=4, n_candidates=32,
+                                              fit_steps=10))
+        trace = ctrl.run(strat,
+                         on_round=lambda i, cfgs, vals: rounds.append(
+                             (i, len(cfgs), len(vals))))
+        assert rounds == [(0, 4, 4), (1, 4, 4), (2, 4, 4)]
+        assert len(trace.values) == 12
+        assert all(r.tag == "bo" for r in ctrl.db.records)
+
+    def test_budget_cap(self):
+        ctrl = Controller(_f, EvalDB())
+        strat = RandomStrategy(_space(), 50, seed=0, batch_size=8)
+        trace = ctrl.run(strat, budget=20)
+        assert len(trace.values) == 20         # 8 + 8 + truncated 4
+        assert not strat.finished
+
+    def test_budget_cap_preserves_strategy_batch_width(self):
+        """A run-level budget must cap the spend, not inflate the
+        strategy's preferred q-batch into one giant round."""
+        rounds = []
+        ctrl = Controller(_f, EvalDB())
+        strat = BOStrategy(_space(), BOConfig(n_init=4, n_iter=40,
+                                              batch_size=3, n_candidates=32,
+                                              fit_steps=10))
+        ctrl.run(strat, budget=13,
+                 on_round=lambda i, cfgs, vals: rounds.append(len(cfgs)))
+        assert rounds == [4, 3, 3, 3]          # init + q-rounds, capped
+
+    def test_prepare_records_full_configs(self):
+        sub = _space().subset(["x", "y"])
+        base = _space().default_config()
+
+        def full(c):
+            out = dict(base)
+            out.update(c)
+            return out
+
+        ctrl = Controller(_f, EvalDB(), tag="s").with_prepare(full)
+        ctrl.run(RandomStrategy(sub, 5, seed=0))
+        assert all(set(r.config) == set(base) for r in ctrl.db.records)
+
+
+# ---------------------------------------------------------------------------
+# successive halving: the promotion schedule
+# ---------------------------------------------------------------------------
+
+class TestSuccessiveHalving:
+    def test_promotion_schedule(self):
+        low = lambda c: (c["x"] - 0.5) ** 2 + 0.07          # noqa: E731
+        high = lambda c: (c["x"] - 0.5) ** 2                # noqa: E731
+        db = EvalDB()
+        ctrl = Controller(low, db)
+        strat = RandomStrategy(_space(), budget=None, seed=0)
+        best_c, best_v, sched = ctrl.run_successive_halving(
+            strat, high, rounds=3, screen=8, promote=2)
+        assert [(s["screened"], s["promoted"]) for s in sched] == [(8, 2)] * 3
+        # promoted really are each round's screen argmin-2
+        for s in sched:
+            top2 = sorted(s["screen_values"])[:2]
+            assert np.allclose(sorted(v + 0.07 for v in s["high_values"]),
+                               top2)
+        tags = [r.tag for r in db.records]
+        assert tags.count("screen") == 24 and tags.count("promote") == 6
+        # best is over high-fidelity values only
+        assert best_v == min(v for s in sched for v in s["high_values"])
+        assert abs(high(best_c) - best_v) < 1e-12
+        # the strategy was told every screened candidate
+        assert len(strat.trace.values) == 24
+
+    def test_bare_high_evaluator_inherits_prepare(self):
+        """Both fidelities must score the same completed config: a bare
+        high-fidelity callable inherits the screen controller's prepare."""
+        sub = _space().subset(["x", "y"])
+        full = _space().completer()
+        seen = []
+
+        def high(c):
+            seen.append(dict(c))
+            return c["x"]
+
+        ctrl = Controller(lambda c: c["x"], EvalDB()).with_prepare(full)
+        ctrl.run_successive_halving(RandomStrategy(sub, budget=None, seed=0),
+                                    high, rounds=2, screen=4, promote=2)
+        assert seen and all(set(c) == set(_space().names) for c in seen)
+
+    def test_respects_strategy_budget(self):
+        low = lambda c: c["x"]                              # noqa: E731
+        ctrl = Controller(low, EvalDB())
+        strat = RandomStrategy(_space(), budget=12, seed=0)
+        _, _, sched = ctrl.run_successive_halving(
+            strat, low, rounds=10, screen=8, promote=2)
+        assert [s["screened"] for s in sched] == [8, 4]     # budget drained
+        assert strat.finished
+
+
+# ---------------------------------------------------------------------------
+# EvalDB hardening: corrupt trailing lines, numpy round-trips
+# ---------------------------------------------------------------------------
+
+class TestEvalDBHardening:
+    def test_skips_corrupt_trailing_line(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        db = EvalDB(str(p))
+        ctrl = Controller(lambda c: float(c["x"]), db, tag="t")
+        ctrl({"x": 1.0})
+        ctrl({"x": 2.0})
+        with p.open("a") as f:                 # crashed writer artifact
+            f.write('{"config": {"x": 3.0}, "val\n')
+        with pytest.warns(UserWarning, match="corrupt line"):
+            db2 = EvalDB(str(p))
+        assert [r.value for r in db2.records] == [1.0, 2.0]
+        # the reloaded DB keeps appending cleanly
+        Controller(lambda c: float(c["x"]), db2, tag="t")({"x": 4.0})
+        with pytest.warns(UserWarning):
+            assert len(EvalDB(str(p))) == 3
+
+    def test_skips_non_json_garbage_line(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        p.write_text('not json at all\n'
+                     '{"config": {"x": 1}, "value": 2.0}\n'
+                     '{"config": {"x": 5}}\n')              # missing value
+        with pytest.warns(UserWarning):
+            db = EvalDB(str(p))
+        assert len(db) == 1 and db.records[0].value == 2.0
+
+    def test_numpy_configs_roundtrip_equal(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        db = EvalDB(str(p))
+        ctrl = Controller(lambda c: 1.5, db, tag="t")
+        ctrl.evaluate_batch([{"a": np.int64(3), "b": np.float32(0.25),
+                              "c": np.bool_(True), "d": "flash"}])
+        fresh = {"a": 3, "b": 0.25, "c": True, "d": "flash"}
+        # in-memory record, the JSONL, and the reload all agree
+        assert db.records[0].config == fresh
+        assert json.loads(p.read_text())["config"] == fresh
+        assert EvalDB(str(p)).records[0].config == fresh
+
+
+# ---------------------------------------------------------------------------
+# completer / overlaid: dynamic-boundary probes must reach the evaluator
+# ---------------------------------------------------------------------------
+
+class TestCompleter:
+    def _full_space(self):
+        return Space((Knob("x", "float", 4.0, lo=1.0, hi=8.0,
+                           dynamic_bound=True),
+                      Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+
+    def test_completer_pins_and_projects(self):
+        sp = self._full_space()
+        out = sp.completer()({"x": 6.0})
+        assert out == {"x": 6.0, "y": 0.5}
+
+    def test_plain_completer_clips_expanded_probe(self):
+        sp = self._full_space()
+        assert sp.completer()({"x": 12.0})["x"] == 8.0
+
+    def test_overlaid_completer_respects_expanded_bounds(self):
+        sp = self._full_space()
+        expanded = sp.subset(["x"]).expand_boundaries(["x"], factor=3.0)
+        assert expanded.knob("x").hi > 8.0
+        out = sp.overlaid(expanded).completer()({"x": 12.0})
+        assert out["x"] == 12.0                 # unclipped
+        assert out["y"] == 0.5                  # non-top knob still pinned
+
+    def test_sapphire_search_prepare_follows_boundary_events(self):
+        """End-to-end: when the BO strategy enlarges a dynamic boundary,
+        the evaluator sees the enlarged probe values (DB records them)."""
+        from repro.core.strategy import BOStrategy
+
+        sp = self._full_space()
+        db = EvalDB()
+        seen = []
+
+        def evaluator(c):
+            seen.append(dict(c))
+            return (c["x"] - 20.0) ** 2         # optimum outside the box
+
+        strat = BOStrategy(sp.subset(["x"]),
+                           BOConfig(n_init=4, n_iter=12, n_candidates=128,
+                                    fit_steps=30, boundary_factor=3.0))
+        cache = {}
+
+        def prepare(sub_cfg):
+            if cache.get("sub") is not strat.space:
+                cache["sub"] = strat.space
+                cache["complete"] = sp.overlaid(strat.space).completer()
+            return cache["complete"](sub_cfg)
+
+        Controller(evaluator, db).with_prepare(prepare).run(strat)
+        assert strat.trace.boundary_events      # enlargement happened
+        assert max(c["x"] for c in seen) > 8.0  # ...and reached the evaluator
+        assert max(r.config["x"] for r in db.records) > 8.0
