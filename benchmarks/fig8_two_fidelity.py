@@ -11,10 +11,16 @@ evaluators of different fidelity inside one search.
   every evaluation pays the expensive fidelity.
 * **two-fidelity arm** — ``Controller.run_successive_halving``: each round
   asks a wide candidate batch, screens it on the CHEAP test-cluster
-  evaluator (analytic, the paper's ±2.5 % noise), and promotes only the
-  top scorers to the high-fidelity evaluator.  The strategy is told every
+  backend (analytic, the paper's ±2.5 % noise), and promotes only the
+  top scorers to the high-fidelity backend.  The strategy is told every
   candidate (promoted ones at their high-fidelity value), so the GP still
   learns from the whole screen.
+
+Both fidelities live behind ONE evaluation service — an
+``ImmediateEvaluationService({"screen": low, "promote": high})`` (with
+``--compiled``, a ``FidelityRouter`` composing the immediate analytic
+screen with a worker-pooled compiled promotion) — and the schedule routes
+on the request's *fidelity field*, not on a choice of evaluator object.
 
 Acceptance: the two-fidelity arm spends <= 50 % of the full arm's
 high-fidelity evaluations and lands within the evaluator's noise (±5 %)
@@ -32,6 +38,9 @@ from repro.core.controller import Controller, EvalDB
 from repro.core.costmodel import MULTI_POD, SINGLE_POD
 from repro.core.evaluators import AnalyticEvaluator, CompiledEvaluator
 from repro.core.knobs import clean_space
+from repro.core.service import (CallableServiceAdapter, FidelityRouter,
+                                ImmediateEvaluationService,
+                                WorkerPoolEvaluationService)
 from repro.core.strategy import BOConfig, make_strategy
 from repro.models.config import SHAPES_BY_NAME
 
@@ -68,18 +77,25 @@ def run(quick: bool = False, arch: str = "yi-6b", shape: str = "train_4k",
     best_full_sub, best_full = full_strat.best()
     n_high_full = len(full_db)
 
-    # -- two-fidelity arm: analytic screen, promote top-k per round ----------
+    # -- two-fidelity arm: one service, routed on the fidelity field ---------
     rounds, screen, promote = (4, 12, 2) if quick else (8, 16, 2)
+    if compiled:
+        # mixed execution models: immediate analytic screen + a
+        # worker-pool of compiles, composed behind one service
+        svc = FidelityRouter({
+            "screen": CallableServiceAdapter(low),
+            "promote": WorkerPoolEvaluationService(high, max_workers=4)})
+    else:
+        svc = ImmediateEvaluationService({"screen": low, "promote": high})
     sh_db = EvalDB()
-    sh_ctrl = Controller(low, sh_db).with_prepare(_full)
+    sh_ctrl = Controller(svc, sh_db).with_prepare(_full)
     sh_strat = make_strategy(
         "bo", sub,
         cfg=BOConfig(n_init=screen, n_iter=(rounds - 1) * screen,
                      batch_size=screen, warm_start=True,
                      n_candidates=512, fit_steps=80, seed=seed))
-    high_ctrl = Controller(high, sh_db, "promote", prepare=_full)
     best_sh_cfg, best_sh, schedule = sh_ctrl.run_successive_halving(
-        sh_strat, high_ctrl, rounds=rounds, screen=screen, promote=promote)
+        sh_strat, rounds=rounds, screen=screen, promote=promote)
     n_high_sh = sum(s["promoted"] for s in schedule)
 
     # score both recommendations noise-free on the expensive fidelity

@@ -11,6 +11,7 @@ One module per paper table/figure (DESIGN.md §7):
   fig8   two-fidelity successive halving (analytic screen -> promotion)
   roofline  §Roofline table from the dry-run artifacts
   perf_batch  batched vs sequential evaluation pipeline wall-clock
+  perf_async  async vs synchronous experiment loop on a latency-bound service
 """
 
 from __future__ import annotations
@@ -23,8 +24,9 @@ import traceback
 from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig5_effectiveness, fig5b_compiled_transfer,
                         fig6_ranking, fig7_topk_efficiency,
-                        fig8_two_fidelity, perf_batch_pipeline,
-                        roofline_table, sec34_optimizers, table2_top16)
+                        fig8_two_fidelity, perf_async_service,
+                        perf_batch_pipeline, roofline_table,
+                        sec34_optimizers, table2_top16)
 
 MODULES = [
     ("fig2b_response_surface", fig2b_response_surface),
@@ -38,6 +40,7 @@ MODULES = [
     ("fig8_two_fidelity", fig8_two_fidelity),
     ("roofline_table", roofline_table),
     ("perf_batch_pipeline", perf_batch_pipeline),
+    ("perf_async_service", perf_async_service),
 ]
 
 

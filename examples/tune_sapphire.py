@@ -29,6 +29,11 @@ def main():
                          "chunked ranking); 1 = the paper's sequential loop")
     ap.add_argument("--strategy", default="bo", choices=strategy_names(),
                     help="search-stage strategy from the registry")
+    ap.add_argument("--async-eval", action="store_true",
+                    help="drive rank/search through the overlapped "
+                         "Controller.run_async loop (identical results on "
+                         "the analytic test cluster; a wall-clock win on "
+                         "services that stream completions out of order)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -40,7 +45,7 @@ def main():
         strategy=args.strategy,
         bo_config=BOConfig(n_init=8, n_iter=16 if args.quick else 48,
                            n_candidates=1024, fit_steps=100, seed=args.seed),
-        seed=args.seed)
+        seed=args.seed, async_eval=args.async_eval)
     res = s.tune()
 
     print("\n=== SAPPHIRE recommendation ===")

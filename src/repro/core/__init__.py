@@ -7,13 +7,23 @@ Public API:
                                   (§3.4  — repro.core.gp, .strategy; the
                                    ask/tell Search Unit.  bo.minimize and
                                    optimizers.* are deprecated wrappers)
-    Controller.run / EvalDB       (Fig 3 — repro.core.controller; the
-                                   experiment loop, incl. two-fidelity
+    EvalRequest / EvalResult / EvaluationService
+                                  (Fig 3 — repro.core.service; the
+                                   Experiment Unit as an async job queue:
+                                   submit/poll/gather/drain)
+    Controller.run / .run_async / EvalDB
+                                  (Fig 3 — repro.core.controller; the
+                                   experiment loops, incl. two-fidelity
                                    successive halving)
     Sapphire(...).tune()          (Fig 3 — repro.core.tuner; rank ->
                                    search -> validate stages)
 """
 
+from repro.core.service import (CallableServiceAdapter,  # noqa: F401
+                                EvalRequest, EvalResult, EvalTicket,
+                                EvaluationService, FidelityRouter,
+                                ImmediateEvaluationService,
+                                WorkerPoolEvaluationService, as_service)
 from repro.core.space import Config, Knob, Space  # noqa: F401
 from repro.core.strategy import (SearchStrategy, Trace,  # noqa: F401
                                  make_strategy, strategy_names)

@@ -18,6 +18,7 @@
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.space import Config, Space
@@ -47,6 +48,11 @@ def minimize(f: Callable[[Config], float], space: Space,
     ``ask`` the next probe batch, score it through ``f`` (or ``f_batch``
     when batching is on), ``tell`` the results.
     """
+    warnings.warn(
+        "bo.minimize is deprecated: compose a strategy with the experiment "
+        "loop instead — Controller(evaluator, EvalDB()).run(BOStrategy("
+        "space, cfg)) (or Controller.run_async for the overlapped loop)",
+        DeprecationWarning, stacklevel=2)
     cfg = cfg or BOConfig()
     use_batch = cfg.batch_size > 1 and f_batch is not None
     strat = BOStrategy(space, cfg, init_configs=init_configs)

@@ -8,14 +8,19 @@ Owns the **evaluation database** (append-only JSONL, the paper's store of
     trace = ctrl.run(make_strategy("bo", space, cfg=BOConfig(...)))
 
 :meth:`Controller.run` is the single synchronous loop every strategy goes
-through — probes are scored as whole batches (``evaluate_batch``), every
-batch is one tagged DB append, and an ``on_round`` hook fires after each
-round so a future async loop can overlap GP refits with in-flight batches.
-:meth:`Controller.run_successive_halving` adds the two-fidelity schedule:
-each round screens a wide candidate batch on this controller's cheap
-evaluator and promotes only the top scorers to a high-fidelity (compiled)
-validation — the strategy is told every candidate, promoted ones at their
-high-fidelity value.
+through — probes are scored as whole batches through the evaluation
+*service* (:mod:`repro.core.service`), every batch is one tagged DB
+append, and an ``on_round`` hook fires after each round.
+:meth:`Controller.run_async` is the overlapped loop the ROADMAP named:
+the next ``ask`` batch is submitted while prior results are still in
+flight, the strategy is told partial/out-of-order completions as they
+stream in, every completion wave is appended to the DB under its writer
+lock, and a failed evaluation becomes an infeasible record instead of a
+crashed run.  :meth:`Controller.run_successive_halving` adds the
+two-fidelity schedule: each round screens a wide candidate batch at the
+cheap fidelity and promotes only the top scorers to the high fidelity —
+fidelity is a *request field* on the wire, not a choice of evaluator
+object.
 
 On a real fleet the controller additionally injects runtime-settable knobs
 without restart (``Knob.restart_required=False``) and schedules
@@ -26,6 +31,7 @@ recommendation report can state the application cost of the final config.
 from __future__ import annotations
 
 import json
+import threading
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -34,7 +40,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.evaluators import evaluate_many
+from repro.core.service import (DEFAULT_FIDELITY, EvalRequest, EvalResult,
+                                EvaluationService, as_service)
 from repro.core.space import Config, Space
 from repro.core.strategy import SearchStrategy, Trace
 
@@ -45,14 +52,29 @@ class EvalRecord:
     value: float
     wall_s: float
     tag: str = ""
+    workload: str = ""
+    fidelity: str = ""
+    status: str = "ok"            # "ok" | "failed" (recorded as infeasible)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
 
 class EvalDB:
-    """Append-only evaluation log; reloadable for warm-started ranking."""
+    """Append-only evaluation log; reloadable for warm-started ranking.
+
+    Writes are guarded by a lock and flushed per record: concurrent
+    worker completions (the async controller streams appends from many
+    threads' results) can neither interleave two half-written JSONL lines
+    nor leave a torn line behind a crash mid-batch.  The corrupt-line
+    skip on reload stays as the last line of defense.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = Path(path) if path else None
         self.records: List[EvalRecord] = []
+        self._lock = threading.Lock()
         if self.path and self.path.exists():
             for i, line in enumerate(self.path.read_text().splitlines()):
                 if not line.strip():
@@ -61,8 +83,11 @@ class EvalDB:
                     d = json.loads(line)
                     rec = EvalRecord(
                         {k: _json_safe(v) for k, v in d["config"].items()},
-                        float(d["value"]), float(d.get("wall_s", 0.0)),
-                        str(d.get("tag", "")))
+                        float("nan") if d["value"] is None
+                        else float(d["value"]), float(d.get("wall_s", 0.0)),
+                        str(d.get("tag", "")), str(d.get("workload", "")),
+                        str(d.get("fidelity", "")),
+                        str(d.get("status", "ok")))
                 except (json.JSONDecodeError, KeyError, TypeError,
                         ValueError):
                     # a crashed writer leaves a truncated trailing line;
@@ -77,31 +102,55 @@ class EvalDB:
         """Normalize numpy scalars at append time so in-memory records,
         the JSONL on disk, and reloaded records all compare equal."""
         return EvalRecord({k: _json_safe(v) for k, v in rec.config.items()},
-                          float(_json_safe(rec.value)), rec.wall_s, rec.tag)
+                          float(_json_safe(rec.value)), rec.wall_s, rec.tag,
+                          rec.workload, rec.fidelity, rec.status)
 
     @staticmethod
     def _line(rec: EvalRecord) -> str:
-        return json.dumps({"config": rec.config,
-                           "value": rec.value,
-                           "wall_s": rec.wall_s,
-                           "tag": rec.tag}) + "\n"
+        # a non-finite value (a failed evaluation recorded before the
+        # raise) serializes as null, keeping every line strict JSON
+        d = {"config": rec.config,
+             "value": rec.value if np.isfinite(rec.value) else None,
+             "wall_s": rec.wall_s, "tag": rec.tag}
+        # only write the async-era fields when informative: the common
+        # synchronous line stays short and byte-stable for existing
+        # tooling (the default fidelity reloads as "", meaning
+        # unspecified — same as legacy lines)
+        if rec.workload:
+            d["workload"] = rec.workload
+        if rec.fidelity and rec.fidelity != DEFAULT_FIDELITY:
+            d["fidelity"] = rec.fidelity
+        if rec.status != "ok":
+            d["status"] = rec.status
+        return json.dumps(d) + "\n"
 
     def append(self, rec: EvalRecord):
         self.append_batch([rec])
 
     def append_batch(self, recs: Sequence[EvalRecord]):
-        """Record a whole evaluation batch: one list extend, one file
-        append (a batched experiment is the unit of work, and on a fleet
-        the JSONL write is a remote call worth amortizing)."""
+        """Record a whole evaluation batch under the writer lock, flushing
+        line by line — a batched experiment is the unit of work, and a
+        crash can truncate at most the line being written."""
         recs = [self._sanitize(r) for r in recs]
-        self.records.extend(recs)
-        if self.path and recs:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            with self.path.open("a") as f:
-                f.writelines(self._line(r) for r in recs)
+        if not recs:
+            return
+        with self._lock:
+            self.records.extend(recs)
+            if self.path:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                with self.path.open("a") as f:
+                    for r in recs:
+                        f.write(self._line(r))
+                        f.flush()
 
-    def pairs(self, tag: Optional[str] = None) -> Tuple[List[Config], List[float]]:
-        rs = [r for r in self.records if tag is None or r.tag == tag]
+    def pairs(self, tag: Optional[str] = None,
+              workload: Optional[str] = None,
+              include_failed: bool = False,
+              ) -> Tuple[List[Config], List[float]]:
+        rs = [r for r in self.records
+              if (tag is None or r.tag == tag)
+              and (workload is None or r.workload == workload)
+              and (include_failed or r.ok)]
         return [r.config for r in rs], [r.value for r in rs]
 
     def __len__(self):
@@ -120,61 +169,114 @@ def _json_safe(v):
 
 @dataclass
 class Controller:
-    """Experiment Unit driver: evaluates configs, logs to the DB, and runs
-    the ask/tell loop for any search strategy.
+    """Experiment Unit driver: evaluates configs through an evaluation
+    *service*, logs to the DB, and runs the ask/tell loop for any search
+    strategy.
+
+    ``evaluate`` may be anything :func:`repro.core.service.as_service`
+    accepts — an :class:`~repro.core.service.EvaluationService`, an
+    evaluator object, or a bare ``Callable[[Config], float]``; the
+    resolved service is cached and shared across ``with_tag``/
+    ``with_prepare``/``with_workload`` derivatives (one worker pool, not
+    one per tag).
 
     ``prepare`` (optional) maps a strategy-side config to the full config
     the evaluator runs — e.g. expanding a top-K sub-config over pinned
     defaults.  The *prepared* config is what the DB records, so the log
-    always holds runnable configurations.
+    always holds runnable configurations.  ``workload`` names the cell
+    (e.g. ``"yi-6b:train_4k"``) every request/record is stamped with.
     """
 
-    evaluate: Callable[[Config], float]
+    evaluate: Union[Callable[[Config], float], EvaluationService]
     db: EvalDB = field(default_factory=EvalDB)
     tag: str = ""
     prepare: Optional[Callable[[Config], Config]] = None
+    workload: str = ""
+
+    @property
+    def service(self) -> EvaluationService:
+        svc = getattr(self, "_service", None)
+        if svc is None:
+            svc = as_service(self.evaluate)
+            self._service = svc
+        return svc
+
+    def _derive(self, **changes) -> "Controller":
+        kw = {"evaluate": self.evaluate, "db": self.db, "tag": self.tag,
+              "prepare": self.prepare, "workload": self.workload}
+        kw.update(changes)
+        c = Controller(**kw)
+        # resolve eagerly so every derivative shares THIS controller's
+        # service (one worker pool total, not one per tag) — resolution
+        # is cheap: pooled services spawn threads on first submit only
+        c._service = self.service
+        return c
+
+    def with_tag(self, tag: str) -> "Controller":
+        return self._derive(tag=tag)
+
+    def with_prepare(self, prepare: Callable[[Config], Config]) -> "Controller":
+        return self._derive(prepare=prepare)
+
+    def with_workload(self, workload: str) -> "Controller":
+        return self._derive(workload=workload)
+
+    # ---- synchronous evaluation ---------------------------------------------
 
     def __call__(self, cfg: Config) -> float:
-        cfg = self.prepare(cfg) if self.prepare else cfg
-        t0 = time.monotonic()
-        v = float(self.evaluate(cfg))
-        self.db.append(EvalRecord(dict(cfg), v, time.monotonic() - t0,
-                                  self.tag))
-        return v
+        return self.evaluate_batch([cfg])[0]
 
-    def evaluate_batch(self, cfgs: Sequence[Config]) -> List[float]:
-        """Evaluate a whole batch (via the evaluator's ``evaluate_batch``
-        when it has one) and record it as one tagged DB append.  Each
-        record's ``wall_s`` is the batch wall-clock amortized per config."""
+    def _requests(self, cfgs: Sequence[Config],
+                  fidelity: str) -> Tuple[List[Config], List[EvalRequest]]:
         cfgs = [dict(c) for c in cfgs]
         if self.prepare:
             cfgs = [self.prepare(c) for c in cfgs]
+        return cfgs, [EvalRequest(c, fidelity, self.workload, self.tag)
+                      for c in cfgs]
+
+    def _record(self, result: EvalResult, cfg: Config, value: float,
+                wall_s: Optional[float] = None) -> EvalRecord:
+        return EvalRecord(cfg, value,
+                          result.wall_s if wall_s is None else wall_s,
+                          self.tag, self.workload, result.request.fidelity,
+                          result.status)
+
+    def evaluate_batch(self, cfgs: Sequence[Config],
+                       fidelity: str = DEFAULT_FIDELITY) -> List[float]:
+        """Submit a whole batch and block for it (the synchronous
+        contract): one tagged DB append, each record's ``wall_s`` the
+        batch wall-clock amortized per config.  A failed evaluation is
+        recorded (status ``failed``) and then raised — synchronous callers
+        treat a broken benchmark as an error; the async loop is the path
+        that survives failures."""
+        svc = self.service
+        cfgs, reqs = self._requests(cfgs, fidelity)
         t0 = time.monotonic()
-        vals = evaluate_many(self.evaluate, cfgs)
+        results = svc.gather(svc.submit(reqs))
         wall = (time.monotonic() - t0) / max(len(cfgs), 1)
-        self.db.append_batch([EvalRecord(c, v, wall, self.tag)
-                              for c, v in zip(cfgs, vals)])
-        return vals
-
-    def with_tag(self, tag: str) -> "Controller":
-        return Controller(self.evaluate, self.db, tag, self.prepare)
-
-    def with_prepare(self, prepare: Callable[[Config], Config]) -> "Controller":
-        return Controller(self.evaluate, self.db, self.tag, prepare)
+        self.db.append_batch([self._record(r, c, float(r.value), wall)
+                              for c, r in zip(cfgs, results)])
+        failed = [r for r in results if not r.ok]
+        if failed:
+            raise RuntimeError(
+                f"{len(failed)}/{len(results)} evaluations failed; "
+                f"first: {failed[0].error}") from failed[0].exception
+        return [float(r.value) for r in results]
 
     # ---- the experiment loop ------------------------------------------------
 
     def run(self, strategy: SearchStrategy, budget: Optional[int] = None,
             batch_size: Optional[int] = None,
+            fidelity: str = DEFAULT_FIDELITY,
             on_round: Optional[Callable[[int, List[Config], List[float]],
                                         None]] = None) -> Trace:
         """Drive ``strategy`` to completion: ask a probe batch, score it,
         tell the results, repeat until the strategy's budget is told (or
         ``budget`` evaluations have been spent here, when given).
 
-        ``on_round(round_index, configs, values)`` fires after each tell —
-        the seam where a future async controller overlaps the next GP
-        refit with an in-flight Experiment-Unit batch (see ROADMAP).
+        ``on_round(round_index, configs, values)`` fires after each tell.
+        This is the synchronous barrier loop; :meth:`run_async` is the
+        overlapped one.
         """
         spent = 0
         rnd = 0
@@ -194,7 +296,7 @@ class Controller:
                 # cap the spend without distorting the strategy's batch
                 # width: the final round is truncated, not re-asked
                 cfgs = cfgs[:remaining]
-            vals = self.evaluate_batch(cfgs)
+            vals = self.evaluate_batch(cfgs, fidelity=fidelity)
             strategy.tell(cfgs, vals)
             spent += len(cfgs)
             if on_round is not None:
@@ -202,31 +304,197 @@ class Controller:
             rnd += 1
         return strategy.trace
 
+    def run_async(self, strategy: SearchStrategy,
+                  budget: Optional[int] = None,
+                  batch_size: Optional[int] = None,
+                  max_in_flight: Optional[int] = None,
+                  min_ask: int = 1,
+                  fidelity: str = DEFAULT_FIDELITY,
+                  failure_value: Optional[float] = None,
+                  on_round: Optional[Callable[[int, List[Config],
+                                               List[float]], None]] = None,
+                  ) -> Trace:
+        """The overlapped experiment loop (ROADMAP's async follow-on).
+
+        Keeps the evaluation service saturated: the next ``ask`` batch is
+        submitted while prior probes are still in flight, and the strategy
+        is ``tell``-ed each completion *wave* — partial and out of order —
+        as results stream back (the seam the ask/tell protocol guarantees:
+        in-flight probes already count against the strategy's budget, so
+        the GP refit no longer gates probe submission).  Every wave is one
+        tagged DB append under the writer lock.
+
+        A failed evaluation does not kill the run: it is recorded with
+        status ``failed`` (excluded from ``pairs()`` by default) and told
+        to the strategy at a penalty value — ``failure_value`` if given,
+        otherwise strictly past the worst value observed so far (a finite
+        "this region is bad" signal; ``inf``/``nan`` would flatten the
+        GP, and anything not clearly worse than the incumbent could make
+        a broken config look attractive).  A failure landing before *any*
+        success is held back and priced once the first real value fixes
+        the objective's scale — a guessed absolute penalty could
+        accidentally beat genuine values; only if the whole run fails is
+        the fallback ``1e6`` used (no best exists to corrupt then).
+
+        ``max_in_flight`` caps concurrent submissions (default: the
+        strategy's own pending-probe accounting is the only cap);
+        ``min_ask > 1`` coalesces completion waves — with probes still in
+        flight, the loop waits until that many slots are free before the
+        next ``ask``, so an expensive proposer (a GP refit per ask) is
+        amortized over a q-batch instead of re-running for every single
+        straggler (set it to about half the worker count; ``min_ask =
+        max_in_flight`` degenerates to the synchronous barrier).
+        ``on_round(round_index, configs, values)`` fires per completion
+        wave.  Submission yields to completed results — the loop tells
+        what has landed before asking for more — so on an immediate
+        (analytic) service this reproduces :meth:`run` exactly: same
+        noise stream, same trace.
+        """
+        svc = self.service
+        pending: Dict[int, Tuple[Config, Config]] = {}   # uid -> (asked,
+        spent = 0                                        #         prepared)
+        rnd = 0
+        worst = float("-inf")
+
+        def submit_more():
+            nonlocal spent
+            while not strategy.finished:
+                if getattr(svc, "ready", 0) > 0:
+                    return          # landed results first: fresher asks
+                if budget is not None and spent >= budget:
+                    return
+                room = None
+                if max_in_flight is not None:
+                    room = max_in_flight - len(pending)
+                    if room <= 0:
+                        return
+                    if pending and room < min(
+                            min_ask,
+                            budget - spent if budget is not None
+                            else min_ask):
+                        return      # coalesce: amortize the next ask
+                n = batch_size
+                if budget is not None and n is not None:
+                    # a budget never overrides ask(None) — the strategy's
+                    # preferred batch is truncated below, exactly as in
+                    # run(), so the two loops stay trace-identical
+                    n = min(n, budget - spent)
+                if room is not None:
+                    n = room if n is None else min(n, room)
+                asked = strategy.ask(n)
+                if not asked:
+                    return
+                if budget is not None and len(asked) > budget - spent:
+                    # cap the spend without distorting the strategy's
+                    # batch width: the final round is truncated
+                    asked = asked[:budget - spent]
+                asked = [dict(c) for c in asked]
+                prepared, reqs = self._requests(asked, fidelity)
+                for t, a, p in zip(svc.submit(reqs), asked, prepared):
+                    pending[t.uid] = (a, p)
+                spent += len(asked)
+
+        deferred: List[Tuple[EvalResult, Config, Config]] = []
+
+        def tell_wave(wave):
+            nonlocal rnd
+            if failure_value is not None:
+                penalty = failure_value
+            elif np.isfinite(worst):
+                penalty = worst + max(abs(worst), 1.0)
+            else:
+                penalty = 1e6       # the whole run failed: scale unknowable
+            asked_cfgs: List[Config] = []
+            values: List[float] = []
+            records: List[EvalRecord] = []
+            for r, asked_c, prepared_c in wave:
+                v = float(r.value) if r.ok else penalty
+                records.append(self._record(r, prepared_c, v))
+                asked_cfgs.append(asked_c)
+                values.append(v)
+            if records:
+                self.db.append_batch(records)
+                strategy.tell(asked_cfgs, values)
+                if on_round is not None:
+                    on_round(rnd, asked_cfgs, values)
+                rnd += 1
+
+        while True:
+            submit_more()
+            if not pending:
+                if deferred:
+                    # nothing in flight and nothing succeeded yet: price
+                    # the held failures at the fallback so a blocked
+                    # strategy is told and the run can continue
+                    tell_wave(deferred)
+                    deferred = []
+                    continue
+                break
+            results = svc.poll(timeout=None)    # block for the first wave
+            if not results:
+                # the protocol: poll(None) returns empty only when nothing
+                # is in flight — any pending entries left are orphaned
+                # (claimed elsewhere or lost) and nothing more will come
+                break
+            wave = [(r, *e) for r in results
+                    if (e := pending.pop(r.ticket.uid, None)) is not None]
+            # two passes: every ok value in the wave raises the penalty
+            # floor *before* any failure is priced, so an early failure
+            # can't be told a deceptively good value
+            for r, _, _ in wave:
+                if r.ok:
+                    worst = max(worst, float(r.value))
+            if failure_value is None and not np.isfinite(worst):
+                # no success yet: hold every failure back until the first
+                # real value fixes the objective's scale
+                deferred += wave
+                continue
+            if deferred:
+                wave = deferred + wave
+                deferred = []
+            tell_wave(wave)
+        if deferred:
+            tell_wave(deferred)     # nothing ever succeeded (or orphaned
+        return strategy.trace       # tail): price at the fallback
+
     def run_successive_halving(
             self, strategy: SearchStrategy,
-            high: Union["Controller", Callable[[Config], float]],
-            rounds: int, screen: int, promote: int,
+            high: Union["Controller", Callable[[Config], float], None] = None,
+            rounds: int = 4, screen: int = 16, promote: int = 2,
             screen_tag: str = "screen", promote_tag: str = "promote",
             on_round: Optional[Callable[[int, Dict], None]] = None,
     ) -> Tuple[Config, float, List[Dict]]:
         """Two-fidelity successive halving: per round, ask ``screen``
-        candidates, score them all on *this* controller's cheap evaluator
-        (the analytic test cluster), promote the ``promote`` best to the
-        ``high``-fidelity evaluator (the compiled product cluster), and
-        tell the strategy every candidate — promoted ones at their
-        high-fidelity value, the rest at their screen value (a cheap
-        multi-fidelity prior for the surrogate).
+        candidates, score them all at the cheap screen fidelity (the
+        analytic test cluster), promote the ``promote`` best to the high
+        fidelity (the compiled product cluster), and tell the strategy
+        every candidate — promoted ones at their high-fidelity value, the
+        rest at their screen value (a cheap multi-fidelity prior for the
+        surrogate).
+
+        Fidelity is a *request field*: every screen request is stamped
+        ``fidelity=screen_tag`` and every promotion ``fidelity=
+        promote_tag``.  With ``high=None`` both fidelities are served by
+        *this* controller's service — e.g. an
+        :class:`~repro.core.service.ImmediateEvaluationService` hosting
+        ``{screen_tag: analytic, promote_tag: compiled}`` backends or a
+        :class:`~repro.core.service.FidelityRouter` — so the schedule
+        needs no second evaluator object.  Passing a ``high`` controller/
+        evaluator keeps the legacy two-object form working.
 
         Returns ``(best_config, best_value, schedule)`` where best is over
         *high-fidelity* measurements only and ``schedule`` records, per
         round, what was screened and what was promoted.
         """
-        if isinstance(high, Controller):
+        if high is None:
+            high_ctrl = self.with_tag(promote_tag)
+        elif isinstance(high, Controller):
             high_ctrl = high if high.tag else high.with_tag(promote_tag)
         else:
             # a bare evaluator inherits this controller's prepare hook —
             # both fidelities must score the same completed config
-            high_ctrl = Controller(high, self.db, promote_tag, self.prepare)
+            high_ctrl = Controller(high, self.db, promote_tag, self.prepare,
+                                   self.workload)
         screen_ctrl = self.with_tag(screen_tag)
         best_c: Optional[Config] = None
         best_v = float("inf")
@@ -237,11 +505,13 @@ class Controller:
             cands = strategy.ask(screen)
             if not cands:
                 break
-            screen_vals = screen_ctrl.evaluate_batch(cands)
+            screen_vals = screen_ctrl.evaluate_batch(cands,
+                                                     fidelity=screen_tag)
             order = np.argsort(screen_vals, kind="stable")
             keep = [int(i) for i in order[:max(min(promote, len(cands)), 1)]]
             promoted = [cands[i] for i in keep]
-            high_vals = high_ctrl.evaluate_batch(promoted)
+            high_vals = high_ctrl.evaluate_batch(promoted,
+                                                 fidelity=promote_tag)
             vals = [float(v) for v in screen_vals]
             for i, hv in zip(keep, high_vals):
                 vals[i] = float(hv)

@@ -21,14 +21,24 @@ unit of work.  ``AnalyticEvaluator`` draws its noise with a *per-row* PRNG
 key and a single vmapped draw, so a batch reproduces the noise stream of
 n sequential ``__call__``s (same keys; values equal to f32 ULP);
 ``CompiledEvaluator`` falls back to a thread pool over the compile cache.
+
+Service protocol: both evaluators are *backends* of the first-class
+evaluation API in :mod:`repro.core.service` — the analytic evaluator's
+``evaluate_batch_detailed`` gives the immediate service its values *and*
+feasibility in one bit-compatible sweep, and the compiled evaluator
+(``service_kind = "pool"``) runs behind a persistent worker pool that
+streams completions out of order.  :func:`repro.core.service.as_service`
+performs the wrapping; ``evaluate_many`` below is the legacy synchronous
+shim over the same layer.
 """
 
 from __future__ import annotations
 
 import hashlib
 import json
+import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +48,15 @@ from repro.core.costmodel import (SINGLE_POD, CostBreakdown, Hardware,
                                   MeshShape, V5E, estimate)
 from repro.core.space import Config
 from repro.models.config import ModelConfig, ShapeCell
+
+
+def _trim_history(history: list, cap: Optional[int]):
+    """Ring-buffer semantics on a plain list: keep the newest ``cap``
+    records.  ``cap=None`` keeps everything (tests inspect full history);
+    long async runs set a cap so streamed completions don't grow memory
+    without bound."""
+    if cap is not None and len(history) > cap:
+        del history[:len(history) - cap]
 
 
 def _stable_seed(cfg: Config, salt: int) -> int:
@@ -69,6 +88,8 @@ class AnalyticEvaluator:
     hw: Hardware = V5E
     noise_sigma: float = 0.025          # paper: ±2.5 % benchmark deviation
     seed: int = 0
+    history_cap: Optional[int] = None   # keep-all by default (tests); async
+                                        # runs cap the record ring buffer
     calls: int = 0
     history: list = field(default_factory=list)
 
@@ -83,6 +104,7 @@ class AnalyticEvaluator:
         self.history.append({"knobs": dict(knobs), "step_s": step,
                              "true_step_s": bd.step_s,
                              "feasible": bd.feasible})
+        _trim_history(self.history, self.history_cap)
 
     def __call__(self, knobs: Config) -> float:
         bd = self.breakdown(knobs)
@@ -96,12 +118,17 @@ class AnalyticEvaluator:
         self._record(knobs, bd, step)
         return step
 
-    def evaluate_batch(self, configs: Sequence[Config]) -> np.ndarray:
-        """Score n configs in one shot; same noise stream as n sequential
-        ``__call__``s (each row keeps its own eval-indexed noise key)."""
+    def evaluate_batch_detailed(
+            self, configs: Sequence[Config],
+    ) -> Tuple[np.ndarray, List[CostBreakdown]]:
+        """Score n configs in one shot, returning the per-config cost
+        breakdowns alongside the noisy step times — what the evaluation
+        *service* reports as feasibility without re-running the cost
+        model.  Same noise stream as n sequential ``__call__``\\ s (each
+        row keeps its own eval-indexed noise key)."""
         cfgs = list(configs)
         if not cfgs:
-            return np.zeros(0, np.float64)
+            return np.zeros(0, np.float64), []
         bds = [self.breakdown(c) for c in cfgs]
         base = self.calls
         self.calls += len(cfgs)
@@ -115,7 +142,10 @@ class AnalyticEvaluator:
             steps = steps * noise
         for c, bd, s in zip(cfgs, bds, steps):
             self._record(c, bd, float(s))
-        return steps
+        return steps, bds
+
+    def evaluate_batch(self, configs: Sequence[Config]) -> np.ndarray:
+        return self.evaluate_batch_detailed(configs)[0]
 
 
 @dataclass
@@ -125,14 +155,26 @@ class CompiledEvaluator:
     Lazy-imports the launch layer so ``repro.core`` stays importable in
     processes that must not touch jax device state (the dry-run sets
     XLA_FLAGS before any jax import).
+
+    Thread-safe: the compile itself runs outside the lock (XLA releases
+    the GIL, so distinct configs overlap in a worker pool), but every
+    ``calls``/``history``/``_cache`` update happens under ``_lock`` so
+    concurrent worker completions can't tear the bookkeeping.
+    ``service_kind = "pool"`` tells :func:`repro.core.service.as_service`
+    to wrap this evaluator in a persistent worker pool.
     """
     model_cfg: ModelConfig
     cell: ShapeCell
     multi_pod: bool = False
-    max_workers: int = 4               # evaluate_batch thread pool width
+    max_workers: int = 4               # batch / worker-pool width
+    history_cap: Optional[int] = None  # keep-all by default; see Analytic
     calls: int = 0
     history: list = field(default_factory=list)
     _cache: Dict[str, float] = field(default_factory=dict)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    service_kind = "pool"
 
     @staticmethod
     def _key(knobs: Config) -> str:
@@ -145,15 +187,25 @@ class CompiledEvaluator:
                            multi_pod=self.multi_pod)
         return res["roofline"]["step_s"]
 
+    def _store(self, key: str, knobs: Config, step: float) -> float:
+        """Record a finished compile; first writer wins on a duplicate
+        (two workers may race to compile the same config — the score is
+        deterministic, so the duplicate is dropped, not double-counted)."""
+        with self._lock:
+            if key not in self._cache:
+                self.calls += 1
+                self.history.append({"knobs": dict(knobs), "step_s": step})
+                _trim_history(self.history, self.history_cap)
+                self._cache[key] = step
+            return self._cache[key]
+
     def __call__(self, knobs: Config) -> float:
         key = self._key(knobs)
-        if key in self._cache:
-            return self._cache[key]
-        step = self._compile(knobs)
-        self.calls += 1
-        self.history.append({"knobs": dict(knobs), "step_s": step})
-        self._cache[key] = step
-        return step
+        with self._lock:
+            if key in self._cache:
+                return self._cache[key]
+        step = self._compile(knobs)      # slow path: outside the lock
+        return self._store(key, knobs, step)
 
     def true_step(self, knobs: Config) -> float:
         """Noise-free objective — the compile path is deterministic, so
@@ -170,10 +222,11 @@ class CompiledEvaluator:
 
         cfgs = list(configs)
         keys = [self._key(c) for c in cfgs]
-        missing: Dict[str, Config] = {}
-        for k, c in zip(keys, cfgs):
-            if k not in self._cache and k not in missing:
-                missing[k] = c
+        with self._lock:
+            missing: Dict[str, Config] = {}
+            for k, c in zip(keys, cfgs):
+                if k not in self._cache and k not in missing:
+                    missing[k] = c
         if missing:
             order = list(missing)
             workers = min(self.max_workers, len(order))
@@ -184,17 +237,24 @@ class CompiledEvaluator:
             else:
                 steps = [self._compile(missing[k]) for k in order]
             for k, step in zip(order, steps):
-                self.calls += 1
-                self.history.append({"knobs": dict(missing[k]),
-                                     "step_s": step})
-                self._cache[k] = step
-        return np.asarray([self._cache[k] for k in keys], np.float64)
+                self._store(k, missing[k], step)
+        with self._lock:
+            return np.asarray([self._cache[k] for k in keys], np.float64)
 
 
 def evaluate_many(evaluate, configs: Sequence[Config]) -> List[float]:
-    """Batch-or-loop shim: use ``evaluate_batch`` when the evaluator has
-    one, otherwise fall back to sequential calls."""
-    batch = getattr(evaluate, "evaluate_batch", None)
-    if batch is not None:
-        return [float(v) for v in batch(configs)]
-    return [float(evaluate(c)) for c in configs]
+    """Batch-or-loop shim, delegated through the evaluation-service layer
+    (:class:`repro.core.service.CallableServiceAdapter`) so there is
+    exactly one place that decides between ``evaluate_batch`` and a
+    sequential loop.  Synchronous contract preserved: a failed evaluation
+    raises instead of returning a failed result."""
+    from repro.core.service import CallableServiceAdapter, EvalRequest
+
+    svc = CallableServiceAdapter(evaluate)
+    results = svc.gather(svc.submit([EvalRequest(c) for c in configs]))
+    failed = [r for r in results if not r.ok]
+    if failed:
+        raise RuntimeError(
+            f"{len(failed)}/{len(results)} evaluations failed; first: "
+            f"{failed[0].error}") from failed[0].exception
+    return [float(r.value) for r in results]

@@ -21,6 +21,7 @@ plots them side by side under identical evaluation budgets and noise.
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional, Tuple
 
 from repro.core.space import Config, Space
@@ -35,6 +36,13 @@ def _drive(strategy: SearchStrategy,
            f: Callable[[Config], float]) -> Tuple[Config, float, Trace]:
     """Synchronous closed loop: ask the strategy's preferred batch, score
     each config through ``f``, tell, repeat until the budget is told."""
+    warnings.warn(
+        f"optimizers.* wrappers are deprecated: drive the strategy through "
+        f"the experiment loop instead — Controller(evaluator, EvalDB())"
+        f".run(make_strategy(..., space, budget=...)) replaces this "
+        f"{type(strategy).__name__} closed loop (Controller.run_async for "
+        f"the overlapped version)",
+        DeprecationWarning, stacklevel=3)
     while not strategy.finished:
         cfgs = strategy.ask()
         if not cfgs:

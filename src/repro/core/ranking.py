@@ -171,17 +171,35 @@ def rank_with_controller(space: Space, controller: "Controller",
                          n_samples: int = 300, seed: int = 0,
                          batch_size: Optional[int] = None,
                          strategy: str = "random",
-                         stability_rounds: int = 0) -> RankingResult:
+                         stability_rounds: int = 0,
+                         async_eval: bool = False,
+                         max_in_flight: Optional[int] = None,
+                         min_ask: int = 1) -> RankingResult:
     """The §3.3 ranking stage as strategy + experiment loop: a design
-    strategy from the registry (LHS by default) is driven through
-    ``controller.run`` — every design batch is one tagged DB append —
-    and the resulting trace feeds the Lasso-path ranking.  The samples
-    and values are identical to :func:`rank` under the same seed (the
-    evaluator noise stream is indexed per evaluation, not per batch
-    shape)."""
+    strategy from the registry (LHS by default) is driven through the
+    controller's evaluation service — every design batch is one tagged DB
+    append — and the resulting trace feeds the Lasso-path ranking.  The
+    samples and values are identical to :func:`rank` under the same seed
+    (the evaluator noise stream is indexed per evaluation, not per batch
+    shape).  ``async_eval`` drives the design through the overlapped
+    :meth:`~repro.core.controller.Controller.run_async` loop — a design
+    strategy never blocks on ``tell``, so the whole LHS streams through
+    the service as fast as it completes (identical samples/values on the
+    immediate analytic service).  Failed evaluations are *excluded* from
+    the Lasso fit on the async path: the penalty values the strategy is
+    told would otherwise enter the regression as huge outliers."""
     from repro.core.strategy import make_strategy   # lazy: avoid cycle
     strat = make_strategy(strategy, space, budget=n_samples, seed=seed,
                           batch_size=batch_size)
-    trace = controller.run(strat)
-    return rank(space, None, samples=trace.configs, values=trace.values,
+    if async_eval:
+        n0 = len(controller.db)
+        controller.run_async(strat, batch_size=batch_size,
+                             max_in_flight=max_in_flight, min_ask=min_ask)
+        ok = [r for r in controller.db.records[n0:] if r.ok]
+        samples = [dict(r.config) for r in ok]
+        values = [r.value for r in ok]
+    else:
+        trace = controller.run(strat)
+        samples, values = trace.configs, trace.values
+    return rank(space, None, samples=samples, values=values,
                 seed=seed, stability_rounds=stability_rounds)

@@ -14,13 +14,16 @@ is that interface:
     best_config, best_value = strategy.best()
 
 A :class:`SearchStrategy` proposes configs (``ask``) and learns from
-results (``tell``) but *never* evaluates anything — the experiment loop
-(:meth:`repro.core.controller.Controller.run`) owns evaluation, batching,
-the evaluation DB, and fidelity scheduling.  ``tell`` accepts partial and
-out-of-order batches: an async controller may return results as workers
-finish, promote only a screened subset (successive halving), or inject
-observations the strategy never asked for (warm-start history) — injected
-observations extend the trace but do not consume the search budget.
+results (``tell``) but *never* evaluates anything — the experiment loops
+(:meth:`repro.core.controller.Controller.run` and the overlapped
+:meth:`~repro.core.controller.Controller.run_async`) own evaluation,
+batching, the evaluation DB, and fidelity scheduling.  ``tell`` accepts
+partial and out-of-order batches: the async controller streams results in
+as workers finish, successive halving promotes only a screened subset,
+and warm-start history injects observations the strategy never asked
+for — injected observations extend the trace but do not consume the
+search budget.  Asked-but-untold probes *do* count against the budget, so
+an async driver that keeps many probes in flight cannot overshoot it.
 
 Four strategies re-express the previous closed-loop optimizers:
 

@@ -116,6 +116,19 @@ class Sapphire:
     noise_sigma: float = 0.025
     seed: int = 0
     db_path: Optional[str] = None
+    async_eval: bool = False       # drive rank/search through the
+                                   # overlapped Controller.run_async loop
+                                   # (same search on the immediate
+                                   # analytic service — values equal to
+                                   # float ULP; a wall-clock win when the
+                                   # service streams out of order)
+    async_max_in_flight: Optional[int] = None  # concurrent probes in the
+                                   # async loop (None: each stage's batch
+                                   # width — sync pacing with streamed
+                                   # tells; raise toward workers+min_ask
+                                   # on a slow streaming service)
+    async_min_ask: int = 1         # coalesce completion waves before the
+                                   # next ask (amortizes GP refits)
     evaluator: Optional[Callable[[Config], float]] = None  # override (tests)
 
     def _setup(self):
@@ -127,7 +140,10 @@ class Sapphire:
         ev = self.evaluator or AnalyticEvaluator(
             model_cfg, cell, mesh, noise_sigma=self.noise_sigma,
             seed=self.seed)
-        ctrl = Controller(ev, EvalDB(self.db_path))
+        # every request/record carries the cell it was measured on, so a
+        # shared evaluation DB can be sliced per workload
+        ctrl = Controller(ev, EvalDB(self.db_path),
+                          workload=f"{self.arch}:{self.shape}")
         return model_cfg, cell, mesh, space, pins, report, ctrl
 
     # ---- stage 1: §3.3 ranking over the clean domain ------------------------
@@ -139,7 +155,10 @@ class Sapphire:
             rank_bs = 64 if self.batch_size > 1 else 1
         return ranking.rank_with_controller(
             space, ctrl.with_tag("rank"), n_samples=self.n_rank_samples,
-            seed=self.seed, batch_size=rank_bs, strategy=strategy)
+            seed=self.seed, batch_size=rank_bs, strategy=strategy,
+            async_eval=self.async_eval,
+            max_in_flight=self.async_max_in_flight or rank_bs,
+            min_ask=self.async_min_ask)
 
     # ---- stage 2: §3.4 search over the top-K sub-space -----------------------
 
@@ -179,8 +198,17 @@ class Sapphire:
             return _cache["complete"](sub_cfg)
 
         search_ctrl = ctrl.with_tag(strategy).with_prepare(_full)
-        trace = search_ctrl.run(
-            strat, batch_size=None if strategy == "bo" else self.batch_size)
+        bs = None if strategy == "bo" else self.batch_size
+        if self.async_eval:
+            # default depth = the Experiment-Unit round width: sync
+            # pacing with streamed tells; raise async_max_in_flight to
+            # keep a slow streaming service saturated through refits
+            trace = search_ctrl.run_async(
+                strat, batch_size=bs,
+                max_in_flight=self.async_max_in_flight or self.batch_size,
+                min_ask=self.async_min_ask)
+        else:
+            trace = search_ctrl.run(strat, batch_size=bs)
         best_sub, best_v = strat.best()
         return _full(best_sub), best_v, trace, strat.space
 

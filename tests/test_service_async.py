@@ -1,0 +1,616 @@
+"""Futures-based evaluation services + the overlapped experiment loop:
+submit/poll/gather/drain semantics, out-of-order tells, failure handling
+(failed EvalResult -> infeasible DB row, never a crashed run), EvalDB
+writer-lock integrity, history caps, and the deprecated-wrapper warnings.
+
+Every test runs under a 120 s watchdog (POSIX SIGALRM): a deadlocked
+``gather``/``drain`` fails fast instead of hanging the suite/CI workflow.
+"""
+
+import json
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.controller import Controller, EvalDB, EvalRecord
+from repro.core.service import (CallableServiceAdapter, EvalRequest,
+                                EvaluationService, FidelityRouter,
+                                ImmediateEvaluationService,
+                                WorkerPoolEvaluationService, as_service)
+from repro.core.space import Knob, Space
+from repro.core.strategy import BOConfig, BOStrategy, RandomStrategy
+
+WATCHDOG_S = 120
+
+
+@pytest.fixture(autouse=True)
+def _watchdog():
+    """Deadlock guard for the whole module: a stuck gather/drain raises
+    instead of hanging the workflow (no-op where SIGALRM is missing)."""
+    if not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _fire(signum, frame):
+        raise TimeoutError(f"async-service test exceeded {WATCHDOG_S}s "
+                           "(deadlocked gather/poll?)")
+
+    old = signal.signal(signal.SIGALRM, _fire)
+    signal.alarm(WATCHDOG_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def _space():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+
+
+def _f(c):
+    return (c["x"] - 0.3) ** 2 + (c["y"] - 0.7) ** 2
+
+
+# ---------------------------------------------------------------------------
+# service protocol semantics
+# ---------------------------------------------------------------------------
+
+class TestServiceProtocol:
+    def test_immediate_submit_poll_gather_drain(self):
+        svc = CallableServiceAdapter(_f)
+        cfgs = [{"x": 0.1 * i, "y": 0.5} for i in range(4)]
+        tickets = svc.submit([EvalRequest(c, tag="t") for c in cfgs])
+        assert [t.uid for t in tickets] == [0, 1, 2, 3]
+        assert svc.in_flight == 0 and svc.ready == 4
+        res = svc.gather(tickets[1:3])            # specific, ticket order
+        assert [r.ticket.uid for r in res] == [1, 2]
+        assert all(r.ok and r.status == "ok" for r in res)
+        assert res[0].value == pytest.approx(_f(cfgs[1]))
+        rest = svc.poll()                         # the unclaimed remainder
+        assert sorted(r.ticket.uid for r in rest) == [0, 3]
+        assert svc.drain() == []
+
+    def test_gather_unknown_ticket_raises(self):
+        svc = CallableServiceAdapter(_f)
+        (t,) = svc.submit([EvalRequest({"x": 0.5, "y": 0.5})])
+        svc.gather([t])
+        with pytest.raises(KeyError):
+            svc.gather([t])                       # already claimed
+
+    def test_result_carries_request_fields(self):
+        svc = CallableServiceAdapter(_f)
+        req = EvalRequest({"x": 0.2, "y": 0.9}, fidelity="screen",
+                          workload="yi-6b:train_4k", tag="rank", seed=5)
+        (r,) = svc.gather(svc.submit([req]))
+        assert r.request is req and r.config == req.config
+        assert (r.request.fidelity, r.request.workload,
+                r.request.tag, r.request.seed) == ("screen",
+                                                   "yi-6b:train_4k",
+                                                   "rank", 5)
+
+    def test_failure_is_a_result_not_an_exception(self):
+        def boom(c):
+            raise ValueError("no such config")
+        svc = CallableServiceAdapter(boom)
+        (r,) = svc.gather(svc.submit([EvalRequest({"x": 1, "y": 1})]))
+        assert not r.ok and r.status == "failed" and not r.feasible
+        assert "no such config" in r.error and np.isnan(r.value)
+
+    def test_worker_pool_streams_out_of_order(self):
+        def slow(c):
+            time.sleep(c["x"])                   # latency keyed by config
+            return c["x"]
+        with WorkerPoolEvaluationService(slow, max_workers=3) as svc:
+            reqs = [EvalRequest({"x": d, "y": 0}) for d in (0.15, 0.02, 0.08)]
+            tickets = svc.submit(reqs)
+            res = svc.drain()
+            assert [r.ticket.uid for r in res] != [t.uid for t in tickets]
+            assert sorted(r.value for r in res) == [0.02, 0.08, 0.15]
+            # gather-after-drain on nothing in flight is an error
+            with pytest.raises(KeyError):
+                svc.gather(tickets)
+
+    def test_worker_pool_failure_streams_back(self):
+        def flaky(c):
+            if c["x"] > 0.5:
+                raise RuntimeError("OOM")
+            return c["x"]
+        with WorkerPoolEvaluationService(flaky, max_workers=2) as svc:
+            res = svc.gather(svc.submit(
+                [EvalRequest({"x": v}) for v in (0.1, 0.9, 0.2)]))
+            assert [r.ok for r in res] == [True, False, True]
+            assert "OOM" in res[1].error
+
+    def test_fidelity_dict_routes_and_unknown_fails(self):
+        svc = ImmediateEvaluationService({"cheap": lambda c: 1.0,
+                                          "costly": lambda c: 2.0})
+        assert svc.fidelities == ("cheap", "costly")
+        res = svc.gather(svc.submit([
+            EvalRequest({}, fidelity="costly"),
+            EvalRequest({}, fidelity="cheap"),
+            EvalRequest({}, fidelity="nonsense")]))
+        assert [r.value for r in res[:2]] == [2.0, 1.0]
+        assert not res[2].ok and "nonsense" in res[2].error
+
+    def test_fidelity_router_composes_services(self):
+        pool = WorkerPoolEvaluationService(lambda c: c["x"] * 10,
+                                           max_workers=2)
+        router = FidelityRouter({"screen": CallableServiceAdapter(_f),
+                                 "promote": pool})
+        try:
+            reqs = [EvalRequest({"x": 0.3, "y": 0.7}, fidelity="screen"),
+                    EvalRequest({"x": 0.4, "y": 0.0}, fidelity="promote")]
+            res = router.gather(router.submit(reqs))
+            assert res[0].value == pytest.approx(0.0)
+            assert res[1].value == pytest.approx(4.0)
+            # router tickets, not the routes' internal ones
+            assert [r.request.fidelity for r in res] == ["screen", "promote"]
+            assert router.drain() == []
+        finally:
+            router.close()
+            pool.close()
+
+    def test_fidelity_router_unrouted_fidelity_fails_not_deadlocks(self):
+        """A request with no route must come back as a failed result —
+        an orphaned ticket would deadlock every later gather/drain."""
+        router = FidelityRouter({"screen": CallableServiceAdapter(_f)})
+        try:
+            res = router.gather(router.submit([
+                EvalRequest({"x": 0.3, "y": 0.7}),          # default "test"
+                EvalRequest({"x": 0.3, "y": 0.7}, fidelity="screen")]))
+            assert not res[0].ok and "no route" in res[0].error
+            assert res[1].ok
+            assert router.drain() == []                     # nothing stuck
+        finally:
+            router.close()
+
+    def test_as_service_normalization(self):
+        svc = CallableServiceAdapter(_f)
+        assert as_service(svc) is svc
+        assert isinstance(as_service(_f), CallableServiceAdapter)
+        assert isinstance(as_service(_f), EvaluationService)
+
+        class Poolish:
+            service_kind = "pool"
+            max_workers = 2
+
+            def __call__(self, c):
+                return 1.0
+
+        assert isinstance(as_service(Poolish()), WorkerPoolEvaluationService)
+        with pytest.raises(TypeError):
+            as_service(object())
+
+
+# ---------------------------------------------------------------------------
+# run_async: equivalence, out-of-order tells, failures
+# ---------------------------------------------------------------------------
+
+def _bo(seed=7):
+    return BOStrategy(_space(), BOConfig(n_init=4, n_iter=8, batch_size=4,
+                                         n_candidates=32, fit_steps=10,
+                                         seed=seed))
+
+
+class ShufflingService(ImmediateEvaluationService):
+    """Immediate completion but *shuffled* claim order: every poll hands
+    completions back in a seeded random order, modelling workers that
+    finish out of order."""
+
+    def __init__(self, backend, seed=0):
+        super().__init__(backend)
+        self._rng = np.random.default_rng(seed)
+
+    def poll(self, timeout=0.0):
+        with self._cv:
+            self._rng.shuffle(self._order)
+        return super().poll(timeout)
+
+
+class TestRunAsync:
+    def test_matches_run_exactly_on_immediate_service(self):
+        t_sync = Controller(_f, EvalDB()).run(_bo())
+        t_async = Controller(_f, EvalDB()).run_async(_bo())
+        assert t_sync.configs == t_async.configs
+        assert t_sync.values == t_async.values
+
+    def test_matches_run_exactly_with_budget_cap(self):
+        """A driver-level budget must not distort the strategy's batch
+        width: ask(None) stays ask(None) in both loops, the final round
+        is truncated identically."""
+        from repro.core.strategy import AnnealingStrategy
+        for mk in (_bo, lambda: AnnealingStrategy(_space(), 30, seed=2)):
+            t_sync = Controller(_f, EvalDB()).run(mk(), budget=9)
+            t_async = Controller(_f, EvalDB()).run_async(mk(), budget=9)
+            assert t_sync.configs == t_async.configs
+            assert t_sync.values == t_async.values
+
+    def test_protocol_only_service_terminates(self):
+        """run_async must need nothing beyond submit/poll/gather/drain —
+        a minimal protocol-only service (no in_flight/ready attributes)
+        still drives to completion."""
+
+        class Minimal:
+            def __init__(self):
+                self._done = []
+                self._uid = 0
+
+            def submit(self, reqs):
+                from repro.core.service import EvalResult, EvalTicket
+                ts = []
+                for r in reqs:
+                    ts.append(EvalTicket(self._uid, r))
+                    self._uid += 1
+                self._done += [EvalResult(t, _f(t.request.config),
+                                          wall_s=0.0) for t in ts]
+                return ts
+
+            def poll(self, timeout=0.0):
+                out, self._done = self._done, []
+                return out
+
+            def gather(self, tickets):
+                return self.poll()
+
+            def drain(self):
+                return self.poll()
+
+        trace = Controller(Minimal(), EvalDB()).run_async(
+            RandomStrategy(_space(), 12, seed=0, batch_size=4))
+        assert len(trace.values) == 12
+
+    def test_shuffled_completion_order_reproduces_best(self):
+        """Out-of-order tells: the strategy sees the same observations in
+        a different order, so the best found matches the synchronous loop
+        within the usual noise tolerance."""
+        t_sync = Controller(_f, EvalDB()).run(_bo())
+        svc = ShufflingService(_f, seed=11)
+        t_shuf = Controller(svc, EvalDB()).run_async(_bo())
+        assert sorted(t_shuf.values) != t_shuf.values   # genuinely shuffled
+        assert len(t_shuf.values) == len(t_sync.values)
+        b_sync, b_shuf = t_sync.best[1], t_shuf.best[1]
+        assert b_shuf <= b_sync * 1.05 + 1e-9
+
+    def test_worker_pool_out_of_order_full_budget(self):
+        def jittered(c):
+            time.sleep(0.001 + 0.01 * c["x"])
+            return _f(c)
+        with WorkerPoolEvaluationService(jittered, max_workers=4) as svc:
+            db = EvalDB()
+            trace = Controller(svc, db).run_async(
+                RandomStrategy(_space(), 30, seed=1, batch_size=10),
+                max_in_flight=8)
+        assert len(trace.values) == 30 and len(db) == 30
+        assert {r.status for r in db.records} == {"ok"}
+
+    def test_failed_worker_yields_infeasible_row_not_crash(self, tmp_path):
+        def flaky(c):
+            if c["x"] > 0.8:
+                raise ValueError("OOM: config does not fit")
+            return _f(c)
+        db = EvalDB(str(tmp_path / "evals.jsonl"))
+        ctrl = Controller(flaky, db, tag="search")
+        trace = ctrl.run_async(RandomStrategy(_space(), 25, seed=0))
+        assert len(trace.values) == 25                 # run completed
+        bad = [r for r in db.records if not r.ok]
+        assert bad and all(r.status == "failed" for r in bad)
+        # penalties are strictly worse than every successful value
+        ok_vals = [r.value for r in db.records if r.ok]
+        assert min(r.value for r in bad) > max(ok_vals)
+        # failed rows are excluded from training pairs by default
+        cfgs, vals = db.pairs("search")
+        assert len(cfgs) == 25 - len(bad)
+        _, all_vals = db.pairs("search", include_failed=True)
+        assert len(all_vals) == 25
+        # and the reloaded DB agrees
+        db2 = EvalDB(str(tmp_path / "evals.jsonl"))
+        assert sum(not r.ok for r in db2.records) == len(bad)
+
+    def test_failures_before_any_success_are_priced_off_real_scale(self):
+        """A failure wave arriving before the first success is held back
+        and priced once real values fix the scale — a guessed absolute
+        penalty (1e6) could accidentally beat genuine values (say ~1e8)."""
+        calls = {"n": 0}
+
+        def hot_start(c):
+            calls["n"] += 1
+            if calls["n"] <= 3:
+                raise ValueError("cluster warming up")
+            return 1e8 + 1e6 * c["x"]                  # huge objective
+        db = EvalDB()
+        trace = Controller(hot_start, db).run_async(
+            RandomStrategy(_space(), 12, seed=0, batch_size=3))
+        assert len(trace.values) == 12
+        bad = [r.value for r in db.records if not r.ok]
+        ok = [r.value for r in db.records if r.ok]
+        assert len(bad) == 3
+        assert min(bad) > max(ok)          # never better than a real value
+
+    def test_all_failures_run_terminates_at_fallback(self):
+        def always(c):
+            raise ValueError("nothing works")
+        db = EvalDB()
+        trace = Controller(always, db).run_async(
+            RandomStrategy(_space(), 6, seed=0, batch_size=3))
+        assert len(trace.values) == 6
+        assert all(v == 1e6 for v in trace.values)
+        assert all(not r.ok for r in db.records)
+
+    def test_sync_failure_chains_and_writes_strict_json(self, tmp_path):
+        def boom(c):
+            raise ValueError("bad knob combo")
+        p = tmp_path / "evals.jsonl"
+        db = EvalDB(str(p))
+        with pytest.raises(RuntimeError, match="bad knob") as ei:
+            Controller(boom, db, tag="t").evaluate_batch([{"x": 1}])
+        assert isinstance(ei.value.__cause__, ValueError)   # chain kept
+        # the failed row was recorded, as strict JSON (value null, no NaN)
+        (line,) = p.read_text().splitlines()
+        d = json.loads(line, parse_constant=lambda s: pytest.fail(
+            f"non-strict JSON token {s!r} in EvalDB line"))
+        assert d["value"] is None and d["status"] == "failed"
+        (rec,) = EvalDB(str(p)).records
+        assert np.isnan(rec.value) and not rec.ok
+
+    def test_default_fidelity_not_serialized(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        db = EvalDB(str(p))
+        ctrl = Controller(_f, db, tag="t")
+        ctrl.evaluate_batch([{"x": 0.5, "y": 0.5}])
+        ctrl.evaluate_batch([{"x": 0.5, "y": 0.5}], fidelity="screen")
+        l1, l2 = p.read_text().splitlines()
+        assert "fidelity" not in json.loads(l1)     # default stays lean
+        assert json.loads(l2)["fidelity"] == "screen"
+
+    def test_async_ranking_excludes_failed_samples(self):
+        from repro.core import ranking
+
+        def flaky(c):
+            if c["x"] > 0.85:
+                raise ValueError("boom")
+            return _f(c)
+        db = EvalDB()
+        rk = ranking.rank_with_controller(
+            _space(), Controller(flaky, db, tag="rank"), n_samples=40,
+            seed=0, async_eval=True)
+        n_failed = sum(not r.ok for r in db.records)
+        assert n_failed > 0                        # scenario is exercised
+        assert len(rk.samples) == 40 - n_failed
+        assert max(rk.values) < 1e5                # no penalty outliers
+
+    def test_failure_value_override_and_budget_cap(self):
+        def flaky(c):
+            if c["x"] > 0.9:
+                raise ValueError("boom")
+            return _f(c)
+        ctrl = Controller(flaky, EvalDB())
+        trace = ctrl.run_async(RandomStrategy(_space(), 50, seed=0,
+                                              batch_size=8),
+                               budget=20, failure_value=123.0)
+        assert len(trace.values) == 20
+        assert all(v == 123.0 for c, v in zip(trace.configs, trace.values)
+                   if c["x"] > 0.9)
+
+    def test_min_ask_coalesces_waves(self):
+        def slow(c):
+            time.sleep(0.002)
+            return _f(c)
+        asks = []
+        strat = RandomStrategy(_space(), 24, seed=2)
+        orig = strat.ask
+        strat.ask = lambda n=None: [a for a in orig(n) if asks.append(n) or True]
+        with WorkerPoolEvaluationService(slow, max_workers=4) as svc:
+            Controller(svc, EvalDB()).run_async(strat, max_in_flight=8,
+                                                min_ask=4)
+        # after the initial fill every ask had at least min_ask of room
+        assert all(n is None or n >= 4 for n in asks)
+
+    def test_run_async_applies_prepare_and_workload(self):
+        sub = _space().subset(["x"])
+        full = _space().completer()
+        db = EvalDB()
+        ctrl = Controller(_f, db, tag="s",
+                          workload="cell:a").with_prepare(full)
+        ctrl.run_async(RandomStrategy(sub, 6, seed=0))
+        assert all(set(r.config) == {"x", "y"} for r in db.records)
+        assert all(r.workload == "cell:a" for r in db.records)
+        assert all(r.fidelity == "test" for r in db.records)
+
+
+class TestSapphireAsync:
+    def test_async_pipeline_reproduces_sync_best(self):
+        """Acceptance: the async experiment loop over the immediate
+        analytic service reproduces the synchronous pipeline at equal
+        budget and seed — here exactly (same noise stream, same trace),
+        which is stronger than the within-noise requirement."""
+        from repro.core.tuner import Sapphire
+
+        def make(async_eval):
+            return Sapphire(arch="yi-6b", shape="train_4k", top_k=8,
+                            n_rank_samples=40, batch_size=4,
+                            bo_config=BOConfig(n_init=4, n_iter=8,
+                                               batch_size=4, warm_start=True,
+                                               n_candidates=64, fit_steps=20,
+                                               seed=5),
+                            seed=5, async_eval=async_eval)
+
+        sync_res = make(False).tune()
+        async_res = make(True).tune()
+        assert async_res.n_evaluations == sync_res.n_evaluations == 40 + 12
+        assert async_res.best_value == pytest.approx(sync_res.best_value)
+        assert async_res.trace.configs == sync_res.trace.configs
+
+
+# ---------------------------------------------------------------------------
+# fidelity as a request field: successive halving without a second object
+# ---------------------------------------------------------------------------
+
+class TestFidelityField:
+    def test_successive_halving_high_none_routes_by_fidelity(self):
+        svc = ImmediateEvaluationService(
+            {"screen": lambda c: _f(c) + 0.07, "promote": _f})
+        db = EvalDB()
+        ctrl = Controller(svc, db)
+        best_c, best_v, sched = ctrl.run_successive_halving(
+            RandomStrategy(_space(), budget=None, seed=0),
+            rounds=3, screen=8, promote=2)
+        assert [(s["screened"], s["promoted"]) for s in sched] == [(8, 2)] * 3
+        fids = [r.fidelity for r in db.records]
+        assert fids.count("screen") == 24 and fids.count("promote") == 6
+        assert best_v == pytest.approx(_f(best_c))
+
+    def test_derived_controllers_share_one_service(self):
+        """with_tag/with_prepare/with_workload derivatives must resolve
+        to THIS controller's service — one worker pool total, not one
+        per tag (the Sapphire flow derives before ever evaluating)."""
+
+        class Pooled:
+            service_kind = "pool"
+            max_workers = 2
+
+            def __call__(self, c):
+                return 1.0
+
+        base = Controller(Pooled(), EvalDB())
+        a = base.with_tag("rank")
+        b = base.with_tag("bo").with_prepare(lambda c: c).with_workload("w")
+        assert a.service is b.service is base.service
+        assert isinstance(base.service, WorkerPoolEvaluationService)
+
+    def test_sync_evaluate_batch_stamps_fidelity(self):
+        db = EvalDB()
+        ctrl = Controller(_f, db, tag="t")
+        ctrl.evaluate_batch([{"x": 0.5, "y": 0.5}], fidelity="screen")
+        assert db.records[0].fidelity == "screen"
+
+
+# ---------------------------------------------------------------------------
+# EvalDB: concurrent appends cannot tear lines
+# ---------------------------------------------------------------------------
+
+class TestEvalDBConcurrency:
+    def test_concurrent_append_batches_roundtrip(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        db = EvalDB(str(p))
+        n_threads, per_thread = 8, 25
+
+        def writer(tid):
+            for i in range(per_thread):
+                db.append(EvalRecord({"tid": tid, "i": i}, float(i), 0.0,
+                                     f"t{tid}", "w", "test"))
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(db) == n_threads * per_thread
+        # every line parses and the full multiset of records round-trips
+        lines = p.read_text().splitlines()
+        assert len(lines) == n_threads * per_thread
+        parsed = [json.loads(ln) for ln in lines]
+        for tid in range(n_threads):
+            mine = sorted(d["config"]["i"] for d in parsed
+                          if d["config"]["tid"] == tid)
+            assert mine == list(range(per_thread))
+        db2 = EvalDB(str(p))
+        assert len(db2) == len(db)
+
+    def test_legacy_lines_reload_with_defaults(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        p.write_text('{"config": {"x": 1}, "value": 2.0, "wall_s": 0.1, '
+                     '"tag": "bo"}\n')
+        (rec,) = EvalDB(str(p)).records
+        assert (rec.workload, rec.fidelity, rec.status) == ("", "", "ok")
+        assert rec.ok
+
+
+# ---------------------------------------------------------------------------
+# bounded histories + compiled-evaluator thread safety
+# ---------------------------------------------------------------------------
+
+class TestBoundedHistory:
+    def test_analytic_history_cap(self, tmp_path):
+        from repro.configs import get_config
+        from repro.core.costmodel import SINGLE_POD
+        from repro.core.evaluators import AnalyticEvaluator
+        from repro.core.knobs import clean_space
+        from repro.core.sampling import latin_hypercube
+        from repro.models.config import SHAPES_BY_NAME
+        model_cfg = get_config("yi-6b")
+        cell = SHAPES_BY_NAME["train_4k"]
+        space, _, _ = clean_space(model_cfg, cell, SINGLE_POD)
+        cfgs = latin_hypercube(space, 12, seed=0)
+
+        capped = AnalyticEvaluator(model_cfg, cell, SINGLE_POD, seed=7,
+                                   history_cap=5)
+        free = AnalyticEvaluator(model_cfg, cell, SINGLE_POD, seed=7)
+        v_cap = capped.evaluate_batch(cfgs)
+        v_free = free.evaluate_batch(cfgs)
+        assert np.allclose(v_cap, v_free)          # cap never changes values
+        assert len(capped.history) == 5 and len(free.history) == 12
+        # ring semantics: the newest records survive
+        assert capped.history == free.history[-5:]
+        assert capped.calls == 12
+
+    def test_compiled_thread_safe_and_capped(self):
+        from repro.core.evaluators import CompiledEvaluator
+        ev = CompiledEvaluator.__new__(CompiledEvaluator)
+        ev.multi_pod = False
+        ev.max_workers = 4
+        ev.history_cap = 8
+        ev.calls = 0
+        ev.history = []
+        ev._cache = {}
+        ev._lock = threading.Lock()
+        ev._compile = lambda knobs: 0.001 * knobs["i"]   # stub the dry-run
+
+        def work(base):
+            for i in range(25):
+                ev({"i": base * 25 + i})
+
+        threads = [threading.Thread(target=work, args=(b,)) for b in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert ev.calls == 100 and len(ev._cache) == 100
+        assert len(ev.history) == 8                # capped
+        # cache hits are lock-protected and stable
+        assert ev({"i": 42}) == pytest.approx(0.042)
+        assert ev.calls == 100
+
+
+# ---------------------------------------------------------------------------
+# one batch-or-loop shim + deprecation warnings
+# ---------------------------------------------------------------------------
+
+class TestDeprecatedWrappers:
+    def test_evaluate_many_raises_on_failure(self):
+        from repro.core.evaluators import evaluate_many
+
+        def boom(c):
+            raise ValueError("bad config")
+        with pytest.raises(RuntimeError, match="bad config"):
+            evaluate_many(boom, [{"x": 1}])
+
+    def test_bo_minimize_warns(self):
+        cfg = BOConfig(n_init=2, n_iter=2, n_candidates=16, fit_steps=5)
+        from repro.core import bo
+        with pytest.warns(DeprecationWarning, match="Controller"):
+            bo.minimize(_f, _space(), cfg)
+
+    def test_optimizers_warn(self):
+        from repro.core import optimizers as opt
+        with pytest.warns(DeprecationWarning, match="make_strategy"):
+            opt.random_search(_f, _space(), 4, seed=0)
+        with pytest.warns(DeprecationWarning, match="make_strategy"):
+            opt.simulated_annealing(_f, _space(), 4)
+        with pytest.warns(DeprecationWarning, match="make_strategy"):
+            opt.genetic_algorithm(_f, _space(), 10)
