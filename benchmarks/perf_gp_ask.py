@@ -1,0 +1,201 @@
+"""Device-resident q-EI batch selection vs the legacy per-pick rebuild.
+
+    PYTHONPATH=src python -m benchmarks.perf_gp_ask [--tiny]
+
+The proposer is the tuner's own hot path: every BO round re-fits a GP and
+selects a constant-liar q-EI batch, and past a few hundred evaluations
+the *proposer* — not the cluster — bottlenecks the experiment loop.  Two
+arms, two claims:
+
+* **select** — the legacy ``strategy._select_batch`` loop (q acquisition
+  jit dispatches, q host argmax round trips, q full O(n³) ``condition``
+  Cholesky rebuilds) against the device-resident ``gp.select_batch``
+  (ONE compiled ``lax.scan``: EI scoring, masked argmax, O(n²)
+  incremental-Cholesky fantasy appends).  Both arms pick from the same
+  pool under the same posterior and must agree pick for pick.
+  Acceptance: >= 3x wall-clock at n >= 128, q = 8.
+
+* **submission** — ``Controller.run_async`` with ``BOConfig.refit_async``:
+  the marginal-likelihood refit runs on a background executor over a
+  trace snapshot, so the ask-side submission latency (measured by the
+  controller's ``on_ask`` hook) is independent of ``fit_steps`` — the
+  cluster never waits for Adam.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import Timer, save
+from repro.core import gp
+from repro.core.controller import Controller, EvalDB
+from repro.core.space import Knob, Space
+from repro.core.strategy import BOConfig, BOStrategy, _select_batch
+
+
+def _problem(n: int, d: int, m_cand: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, d))
+    y = (np.sin(3 * x[:, 0]) + (x[:, 1] - 0.4) ** 2
+         + 0.05 * rng.normal(size=n))
+    cand = rng.random((m_cand, d))
+    return x, y, cand
+
+
+def bench_select(n: int, d: int, q: int, m_cand: int, repeats: int,
+                 fantasy: str = "liar") -> dict:
+    x, y, cand = _problem(n, d, m_cand)
+    pad_to = gp._bucket(n + q)
+    st = gp.fit(x, y, steps=60, pad_to=pad_to)
+    cfg = BOConfig(fantasy=fantasy)
+    best_y = float(np.min(y))
+    c32 = cand.astype(np.float32)
+    y_raw = np.zeros(int(st.x.shape[0]), np.float32)
+    y_raw[:n] = y
+
+    def legacy():
+        return _select_batch(st, cand, best_y, q, cfg, x, y, pad_to)
+
+    def device():
+        return np.asarray(gp.select_batch(st, c32, y_raw, n, best_y, q,
+                                          fantasy=fantasy))
+
+    picks_l = legacy()                       # warm both jit caches before
+    idx = device()                           # timing anything
+    same = np.array_equal(np.stack(picks_l),
+                          np.stack([cand[int(i)] for i in idx]))
+
+    def best_block(fn):
+        # best-of-blocks: robust to CPU-contention spikes on shared boxes
+        best = float("inf")
+        for _ in range(4):
+            with Timer() as t:
+                for _ in range(repeats):
+                    fn()
+            best = min(best, t.wall_s / repeats)
+        return best
+
+    t_l = best_block(legacy)
+    t_d = best_block(device)
+    speedup = t_l / max(t_d, 1e-12)
+    print(f"  n={n} q={q} pool={len(cand)} fantasy={fantasy}: "
+          f"legacy {t_l * 1e3:7.2f} ms/batch, "
+          f"device {t_d * 1e3:7.2f} ms/batch  "
+          f"-> {speedup:.1f}x  (same picks: {same})")
+    return {"n": n, "q": q, "pool": len(cand), "fantasy": fantasy,
+            "legacy_ms": t_l * 1e3, "device_ms": t_d * 1e3,
+            "speedup": speedup, "same_picks": bool(same)}
+
+
+def _tuning_space(d: int) -> Space:
+    return Space(tuple(Knob(f"x{i}", "float", 0.5, lo=0.0, hi=1.0)
+                       for i in range(d)))
+
+
+def bench_overlap(fit_steps: int, n_init: int, n_iter: int, q: int,
+                  n_candidates: int, latency: float, refit_async: bool,
+                  d: int = 6, label: bool = True) -> dict:
+    """run_async wall-clock against a latency-bound worker pool, sync-fit
+    vs refit_async at heavy ``fit_steps``.
+
+    The sync arm pays ``fit + evaluate`` per round — the cluster idles
+    for every Adam refit.  With ``refit_async`` the refit runs on the
+    background executor *while the wave is in flight* (kicked after the
+    selection's device work, so on one shared XLA device it queues behind
+    this round's selection, not in front of the next), collapsing the
+    round to ~max(fit, evaluate).  Per-ask submission latencies from the
+    ``on_ask`` hook ride along; the strict no-blocking property is pinned
+    by the monkeypatched-delay test in tests/test_strategy.py (a real fit
+    on the same XLA device still *contends* for it even off-thread)."""
+    import time
+
+    from repro.core.service import WorkerPoolEvaluationService
+
+    space = _tuning_space(d)
+
+    def objective(c):
+        time.sleep(latency)
+        u = np.array([c[f"x{i}"] for i in range(d)])
+        return float(np.sum((u - 0.3) ** 2))
+
+    cfg = BOConfig(n_init=n_init, n_iter=n_iter, batch_size=q,
+                   n_candidates=n_candidates, fit_steps=fit_steps,
+                   refit_async=refit_async)
+    strat = BOStrategy(space, cfg)
+    lat: list = []
+    with WorkerPoolEvaluationService(objective, max_workers=q) as svc:
+        with Timer() as t:
+            Controller(svc, EvalDB()).run_async(
+                strat, max_in_flight=q, min_ask=q,
+                on_ask=lambda k, s: lat.append(s))
+    strat.close()
+    steady = sorted(lat)[:max(len(lat) - 2, 1)]
+    med = float(np.median(steady))
+    if label:
+        arm = "refit_async" if refit_async else "sync-fit   "
+        print(f"  {arm} fit_steps={fit_steps:4d}: wall {t.wall_s:6.2f} s, "
+              f"median steady-state ask {med * 1e3:7.2f} ms "
+              f"({len(lat)} asks)")
+    return {"fit_steps": fit_steps, "refit_async": refit_async,
+            "wall_s": t.wall_s, "median_ask_s": med, "asks": len(lat)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke budgets; no speedup assertion")
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        n, d, q, m_cand, repeats = 48, 4, 4, 256, 5
+        fit_steps = 60
+        sub = dict(n_init=8, n_iter=16, q=4, n_candidates=64,
+                   latency=0.05)
+    else:
+        n, d, q, m_cand, repeats = 256, 8, 8, 2048, 10
+        fit_steps = 1000
+        sub = dict(n_init=16, n_iter=32, q=8, n_candidates=512,
+                   latency=0.25)
+
+    print("== q-EI batch selection: per-pick rebuild vs single-jit scan")
+    select = [bench_select(n, d, q, m_cand, repeats, fantasy=f)
+              for f in ("liar", "believer")]
+
+    print("== run_async round overlap: sync fit vs background refit "
+          f"(fit_steps={fit_steps})")
+    # warmup run compiles the fit/selection programs at these exact
+    # shapes (pad_to is pinned by n_init+n_iter) so neither timed arm
+    # pays compilation
+    bench_overlap(fit_steps, refit_async=False, label=False,
+                  **{**sub, "latency": 0.0})
+    overlap = [bench_overlap(fit_steps, refit_async=r, **sub)
+               for r in (False, True)]
+    sync_wall, async_wall = overlap[0]["wall_s"], overlap[1]["wall_s"]
+    print(f"  background refit: {sync_wall:.2f} s -> {async_wall:.2f} s "
+          f"({sync_wall / async_wall:.2f}x) at equal budget")
+
+    save("perf_gp_ask", {"select": select, "overlap": overlap,
+                         "overlap_speedup": sync_wall / async_wall})
+
+    for r in select:
+        assert r["same_picks"], "device picks diverged from the rebuild loop"
+    if not args.tiny:
+        worst = min(r["speedup"] for r in select)
+        assert worst >= 3.0, f"select_batch speedup {worst:.2f}x < 3x target"
+        # the refit is off the submission path: rounds cost
+        # ~max(fit, evaluate) instead of fit + evaluate
+        assert async_wall < sync_wall * 0.85, (
+            f"refit_async wall {async_wall:.2f} s not below sync "
+            f"{sync_wall:.2f} s")
+    return 0
+
+
+def run(quick: bool = False):
+    """Entry for benchmarks.run."""
+    main(["--tiny"] if quick else [])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,6 +12,11 @@ One module per paper table/figure (DESIGN.md §7):
   roofline  §Roofline table from the dry-run artifacts
   perf_batch  batched vs sequential evaluation pipeline wall-clock
   perf_async  async vs synchronous experiment loop on a latency-bound service
+  perf_gp_ask device-resident q-EI selection + background GP refit
+
+``--json [PATH]`` writes per-benchmark wall-clock timings and statuses to
+an artifacts JSON (default artifacts/bench/run_timings.json) so the perf
+trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
@@ -25,7 +30,7 @@ from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig5_effectiveness, fig5b_compiled_transfer,
                         fig6_ranking, fig7_topk_efficiency,
                         fig8_two_fidelity, perf_async_service,
-                        perf_batch_pipeline, roofline_table,
+                        perf_batch_pipeline, perf_gp_ask, roofline_table,
                         sec34_optimizers, table2_top16)
 
 MODULES = [
@@ -41,6 +46,7 @@ MODULES = [
     ("roofline_table", roofline_table),
     ("perf_batch_pipeline", perf_batch_pipeline),
     ("perf_async_service", perf_async_service),
+    ("perf_gp_ask", perf_gp_ask),
 ]
 
 
@@ -50,10 +56,15 @@ def main(argv=None):
                     help="reduced sample/iteration budgets")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--json", nargs="?", default=None,
+                    const="artifacts/bench/run_timings.json", metavar="PATH",
+                    help="write per-benchmark wall-clock timings to an "
+                         "artifacts JSON (machine-readable perf trajectory)")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
     failures = []
+    timings = []
     for name, mod in MODULES:
         if only and name not in only:
             continue
@@ -61,11 +72,25 @@ def main(argv=None):
         t0 = time.monotonic()
         try:
             mod.run(quick=args.quick)
-            print(f"-- {name} done in {time.monotonic() - t0:.1f}s",
-                  flush=True)
+            wall = time.monotonic() - t0
+            timings.append({"name": name, "wall_s": wall, "status": "ok"})
+            print(f"-- {name} done in {wall:.1f}s", flush=True)
         except Exception:
+            timings.append({"name": name,
+                            "wall_s": time.monotonic() - t0,
+                            "status": "failed"})
             failures.append(name)
             traceback.print_exc()
+    if args.json:
+        import json
+        from pathlib import Path
+
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"quick": args.quick, "benchmarks": timings,
+             "total_wall_s": sum(t["wall_s"] for t in timings)}, indent=1))
+        print(f"-- timings written to {path}")
     print(f"\n{'=' * 72}")
     if failures:
         print(f"FAILED: {failures}")

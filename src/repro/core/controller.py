@@ -30,6 +30,7 @@ recommendation report can state the application cost of the final config.
 
 from __future__ import annotations
 
+import inspect
 import json
 import threading
 import time
@@ -313,6 +314,7 @@ class Controller:
                   failure_value: Optional[float] = None,
                   on_round: Optional[Callable[[int, List[Config],
                                                List[float]], None]] = None,
+                  on_ask: Optional[Callable[[int, float], None]] = None,
                   ) -> Trace:
         """The overlapped experiment loop (ROADMAP's async follow-on).
 
@@ -343,18 +345,42 @@ class Controller:
         next ``ask``, so an expensive proposer (a GP refit per ask) is
         amortized over a q-batch instead of re-running for every single
         straggler (set it to about half the worker count; ``min_ask =
-        max_in_flight`` degenerates to the synchronous barrier).
+        max_in_flight`` degenerates to the synchronous barrier).  On
+        services whose ``poll`` supports ``min_results`` (all built-in
+        ones) the blocking poll coalesces too: the driver wakes once per
+        min_ask-wide wave — one tell, one DB append — instead of once
+        per completed probe.
         ``on_round(round_index, configs, values)`` fires per completion
         wave.  Submission yields to completed results — the loop tells
         what has landed before asking for more — so on an immediate
         (analytic) service this reproduces :meth:`run` exactly: same
         noise stream, same trace.
+
+        ``on_ask(n_asked, wall_s)`` fires after every ``strategy.ask``
+        that returned probes, with the batch width and the ask's
+        wall-clock — the submission-latency probe (empty asks from a
+        blocked or exhausted strategy are not latencies worth recording).
+        The proposer is the only part of
+        this loop that can stall submission; with a strategy that fits
+        its surrogate in the background (``BOConfig.refit_async``) these
+        latencies stay at evaluation-dispatch scale regardless of
+        ``fit_steps``, which is exactly what the hook exists to verify
+        (see ``benchmarks/perf_gp_ask.py``).
         """
         svc = self.service
         pending: Dict[int, Tuple[Config, Config]] = {}   # uid -> (asked,
         spent = 0                                        #         prepared)
         rnd = 0
         worst = float("-inf")
+        # wave-coalescing poll: services whose poll supports min_results
+        # (every _ServiceBase subclass) let the driver sleep through a
+        # whole min_ask-wide wave instead of waking per straggler; other
+        # protocol implementations keep the one-completion wakeup
+        try:
+            poll_coalesces = ("min_results"
+                              in inspect.signature(svc.poll).parameters)
+        except (TypeError, ValueError):
+            poll_coalesces = False
 
         def submit_more():
             nonlocal spent
@@ -381,9 +407,12 @@ class Controller:
                     n = min(n, budget - spent)
                 if room is not None:
                     n = room if n is None else min(n, room)
+                t_ask = time.monotonic()
                 asked = strategy.ask(n)
                 if not asked:
                     return
+                if on_ask is not None:
+                    on_ask(len(asked), time.monotonic() - t_ask)
                 if budget is not None and len(asked) > budget - spent:
                     # cap the spend without distorting the strategy's
                     # batch width: the final round is truncated
@@ -430,7 +459,17 @@ class Controller:
                     deferred = []
                     continue
                 break
-            results = svc.poll(timeout=None)    # block for the first wave
+            if poll_coalesces and min_ask > 1:
+                # block for a whole wave: min_ask results (or everything
+                # in flight), matching the coalesced ask cadence — but at
+                # the budget tail never hold more slots than the run can
+                # still submit, or the last probes idle behind the wave
+                want = min(min_ask, len(pending))
+                if budget is not None and 0 < budget - spent < want:
+                    want = budget - spent
+                results = svc.poll(timeout=None, min_results=want)
+            else:
+                results = svc.poll(timeout=None)    # first completion
             if not results:
                 # the protocol: poll(None) returns empty only when nothing
                 # is in flight — any pending entries left are orphaned

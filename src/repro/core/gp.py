@@ -104,15 +104,22 @@ def init_params(d: int, lengthscale: float = 0.3, signal: float = 1.0,
 PAD_NOISE = 1e6   # pseudo-point noise: pads contribute ~nothing to the fit
 
 
-def _build(params: GPParams, x, y, kind: str, extra_noise=None):
+def _jitter(nv, sv):
+    """Relative diagonal jitter: keeps the condition number f32-safe even
+    when the fitted signal variance is large / lengthscale long (K near
+    rank-1).  Shared by the posterior build and the select_batch fantasy
+    appends — the two paths must stamp identical diagonals."""
+    return nv + 1e-4 * sv + 1e-6
+
+
+def _build(params: GPParams, x, y, kind: str, extra_noise=None,
+           use_pallas: bool = False):
     ls = jnp.exp(params.log_lengthscale)
     sv = jnp.exp(params.log_signal_var)
     nv = jnp.exp(params.log_noise_var)
-    k = KERNELS[kind](x, x, ls, sv)
+    k = gram(kind, x, ls, sv, use_pallas=use_pallas)
     n = x.shape[0]
-    # relative jitter: keeps the condition number f32-safe even when the
-    # fitted signal variance is large / lengthscale long (K near rank-1)
-    diag = jnp.full((n,), nv + 1e-4 * sv + 1e-6, k.dtype)
+    diag = jnp.full((n,), _jitter(nv, sv), k.dtype)
     if extra_noise is not None:
         diag = diag + extra_noise
     kn = k + jnp.diag(diag)
@@ -123,7 +130,7 @@ def _build(params: GPParams, x, y, kind: str, extra_noise=None):
 
 # jitted entry for posterior (re)builds outside the Adam loop — the
 # constant-liar fantasy update calls this once per batch pick
-_build_jit = partial(jax.jit, static_argnames=("kind",))(_build)
+_build_jit = partial(jax.jit, static_argnames=("kind", "use_pallas"))(_build)
 
 
 def neg_log_marginal(params: GPParams, x, y, kind: str, extra_noise=None):
@@ -200,7 +207,8 @@ def _prepare(x: np.ndarray, y: np.ndarray, pad: bool,
 
 def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
         steps: int = 200, params: Optional[GPParams] = None,
-        pad: bool = True, pad_to: Optional[int] = None) -> GPState:
+        pad: bool = True, pad_to: Optional[int] = None,
+        use_pallas: bool = False) -> GPState:
     """Standardize y, fit hyperparameters, build the posterior.
 
     ``pad`` appends huge-noise pseudo-points up to a shape bucket so the
@@ -212,32 +220,48 @@ def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
 
     ``params`` warm-starts the hyperparameter optimization (e.g. from the
     previous BO round's posterior); with ``steps=0`` they are used as-is.
+
+    ``use_pallas`` routes the posterior Gram build through the
+    kernels/gp_gram tile kernel (matern52 only; jnp fallback otherwise).
+    The marginal-likelihood Adam loop stays on the jnp kernel — it is
+    differentiated, and the Pallas kernel defines no VJP.
     """
     xj, yj, ej, y_mean, y_std = _prepare(x, y, pad, pad_to)
     if params is None:
         params = init_params(int(xj.shape[1]))
     if steps > 0:
         params, _ = _fit(params, xj, yj, kind, steps=steps, extra_noise=ej)
-    chol, alpha = _build_jit(params, xj, yj, kind, ej)
+    chol, alpha = _build_jit(params, xj, yj, kind, ej,
+                             use_pallas=use_pallas)
     return GPState(params, xj, yj, chol, alpha,
                    jnp.asarray(y_mean), jnp.asarray(y_std))
 
 
 def condition(params: GPParams, x: np.ndarray, y: np.ndarray,
               kind: str = "matern52", pad: bool = True,
-              pad_to: Optional[int] = None) -> GPState:
+              pad_to: Optional[int] = None,
+              use_pallas: bool = False) -> GPState:
     """Posterior for (x, y) under *fixed* hyperparameters — no
     marginal-likelihood refit.  This is the constant-liar fantasy update
-    of q-batch acquisition: one Cholesky rebuild, no Adam."""
-    return fit(x, y, kind, steps=0, params=params, pad=pad, pad_to=pad_to)
+    of q-batch acquisition: one Cholesky rebuild, no Adam.  (The
+    device-resident :func:`select_batch` replaces this per-pick rebuild
+    with an O(n²) :func:`chol_append`; ``condition`` remains the
+    reference path and the entry for one-off posterior updates.)"""
+    return fit(x, y, kind, steps=0, params=params, pad=pad, pad_to=pad_to,
+               use_pallas=use_pallas)
 
 
-@partial(jax.jit, static_argnames=("kind",))
-def predict(state: GPState, xq, kind: str = "matern52"):
+@partial(jax.jit, static_argnames=("kind", "use_pallas"))
+def predict(state: GPState, xq, kind: str = "matern52",
+            use_pallas: bool = False):
     """Posterior mean/std at query points xq [m,d] (original y scale)."""
     ls = jnp.exp(state.params.log_lengthscale)
     sv = jnp.exp(state.params.log_signal_var)
-    kq = KERNELS[kind](xq, state.x, ls, sv)          # [m, n]
+    if use_pallas and kind == "matern52":
+        from repro.kernels.gp_gram.ops import matern52_cross
+        kq = matern52_cross(xq, state.x, ls, sv)     # [m, n]
+    else:
+        kq = KERNELS[kind](xq, state.x, ls, sv)      # [m, n]
     mean_s = kq @ state.alpha
     v = jax.scipy.linalg.solve_triangular(state.chol, kq.T, lower=True)
     var_s = jnp.maximum(sv - jnp.sum(v * v, axis=0), 1e-12)
@@ -262,3 +286,177 @@ def ucb(state: GPState, xq, kind: str = "matern52", beta: float = 2.0):
     """Lower-confidence bound for minimization (returns negated for argmax)."""
     mean, std = predict(state, xq, kind)
     return -(mean - beta * std)
+
+
+# ---------------------------------------------------------------------------
+# device-resident q-batch selection
+# ---------------------------------------------------------------------------
+
+def chol_append(chol, k_vec, k_ss):
+    """Incremental Cholesky append (O(n²), vs the O(n³) rebuild).
+
+    Given ``chol`` (lower-triangular L with L Lᵀ = K, [n, n]), the cross
+    column ``k_vec = K(x_new, X)`` [n] and the diagonal entry ``k_ss =
+    k(x_new, x_new) + noise``, returns ``(l, d)`` such that
+    ``[[L, 0], [lᵀ, d]]`` is the Cholesky factor of the (n+1)-point
+    matrix ``[[K, k_vec], [k_vecᵀ, k_ss]]``.  This is the constant-liar
+    fantasy update of q-batch acquisition without rebuilding anything.
+    """
+    l = jax.scipy.linalg.solve_triangular(chol, k_vec, lower=True)
+    d = jnp.sqrt(jnp.maximum(k_ss - jnp.dot(l, l), 1e-12))
+    return l, d
+
+
+@partial(jax.jit,
+         static_argnames=("q", "kind", "fantasy", "acquisition",
+                          "use_pallas"))
+def select_batch(state: GPState, cand, y_raw, n, best_y, q: int,
+                 kind: str = "matern52", fantasy: str = "liar",
+                 acquisition: str = "ei", xi: float = 0.01,
+                 use_pallas: bool = False):
+    """Fantasized q-EI batch selection as ONE compiled program.
+
+    Replaces the host loop (q acquisition jit calls, q host argmax round
+    trips, q full ``condition`` rebuilds at O(n³) each) with a single
+    ``lax.scan`` over picks: score the candidate pool, masked argmax,
+    fantasize the pick's outcome (constant liar at ``best_y`` or Kriging
+    believer at the posterior mean) and append it to the posterior via
+    :func:`chol_append` — O(n²) per fantasy point, never leaving the
+    device.
+
+    Layout: the fitted padded state (``state.x`` [m, d], ``state.chol``
+    [m, m], pads included exactly as :func:`fit` built them) occupies the
+    leading block of a fixed [m+q-1]-size working set; fantasy points are
+    *appended* into the trailing slots, so every shape is pinned by
+    (m, q, |cand|) and the whole selection compiles once per run.  Like
+    the rebuild path, the target standardization is recomputed over the
+    real + fantasy observations at every pick (``gp.condition`` restamps
+    y_mean/y_std per rebuild; this must match to reproduce its picks).
+
+    Args:
+      state: posterior from :func:`fit` (padded or not).
+      cand:  [M, d] float32 candidate pool (unit cube).
+      y_raw: [m] float32 raw targets aligned with ``state.x``; entries at
+             index ≥ n (pads) are ignored.
+      n:     number of real observations (traced — growing n does not
+             recompile).
+      best_y: incumbent best raw target (the EI threshold and the liar).
+      q:     batch width (static).
+      fantasy: "liar" | "believer";  acquisition: "ei" | "ucb".
+
+    Returns ``picks`` [q] int32 — indices into ``cand``, identical to the
+    legacy per-pick rebuild loop on the same inputs.
+    """
+    m, d_dim = state.x.shape
+    M = cand.shape[0]
+    S = q - 1                               # fantasy slots
+    T = m + S
+    ls = jnp.exp(state.params.log_lengthscale)
+    sv = jnp.exp(state.params.log_signal_var)
+    nv = jnp.exp(state.params.log_noise_var)
+    kfn = KERNELS[kind]
+    cand = cand.astype(jnp.float32)
+    y_raw = y_raw.astype(jnp.float32)
+    best_y = jnp.asarray(best_y, jnp.float32)
+
+    # the one O(M·m·d) pass over the whole candidate pool (LHS + local
+    # ball + axis sweeps fused): cross-Gram against the training block —
+    # the Pallas tile kernel's natural shape
+    if use_pallas and kind == "matern52":
+        from repro.kernels.gp_gram.ops import matern52_cross
+        k_cx = matern52_cross(cand, state.x, ls, sv)        # [M, m]
+    else:
+        k_cx = kfn(cand, state.x, ls, sv)                   # [M, m]
+
+    # fixed-shape working set; inactive fantasy rows are identity rows of
+    # L with zeroed cross entries, so prefix arithmetic is exact
+    chol0 = jnp.zeros((T, T), jnp.float32)
+    chol0 = chol0.at[:m, :m].set(state.chol)
+    if S:
+        fdiag = jnp.arange(m, T)
+        chol0 = chol0.at[fdiag, fdiag].set(1.0)
+    real = jnp.arange(m) < n                # real rows of the padded state
+    noise_ss = _jitter(nv, sv)              # _build's diagonal, exactly
+
+    # forward-substitution state, computed ONCE against the fitted block
+    # and grown one row per pick.  Appending a Cholesky row leaves every
+    # existing forward-solve entry untouched, so the O(n²·M) candidate
+    # solve is paid once — each scan step only appends its own row:
+    #   V [T, M] = L⁻¹ Kᵀ(X, cand)      (posterior-variance vectors)
+    #   a [T]    = L⁻¹ (masked raw y)    (mean numerator, raw scale)
+    #   b [T]    = L⁻¹ (active mask)     (mean's standardization shift)
+    # mean_s = Vᵀ(a − μ·b)/σ exactly reproduces kq @ K⁻¹ys: ys is linear
+    # in the raw targets and the active-row indicator, and the per-pick
+    # re-standardization (μ, σ over real+fantasy targets — what the
+    # rebuild path's _prepare recomputes every condition call) only mixes
+    # those two solved vectors.
+    y_masked = jnp.where(real, y_raw, 0.0)
+    v0 = jnp.zeros((T, M), jnp.float32)
+    v0 = v0.at[:m, :].set(jax.scipy.linalg.solve_triangular(
+        state.chol, k_cx.T, lower=True))
+    a0 = jnp.zeros((T,), jnp.float32)
+    a0 = a0.at[:m].set(jax.scipy.linalg.solve_triangular(
+        state.chol, y_masked, lower=True))
+    b0 = jnp.zeros((T,), jnp.float32)
+    b0 = b0.at[:m].set(jax.scipy.linalg.solve_triangular(
+        state.chol, real.astype(jnp.float32), lower=True))
+
+    carry0 = (
+        chol0, v0, a0, b0,
+        jnp.zeros((S,), jnp.float32),       # fantasy raw targets
+        jnp.zeros((S, d_dim), jnp.float32),  # fantasy inputs
+        jnp.zeros((M,), bool),              # taken mask
+    )
+
+    def step(carry, j):
+        chol, v, a, b, y_f, x_f, taken = carry
+        active = jnp.arange(S) < j if S else jnp.zeros((0,), bool)
+        # per-pick re-standardization over real + fantasy targets
+        w = jnp.concatenate([real, active]).astype(jnp.float32)
+        yr = jnp.concatenate([y_masked, jnp.where(active, y_f, 0.0)])
+        cnt = jnp.sum(w)
+        mu_y = jnp.sum(yr) / cnt            # masked entries are zero
+        std_y = jnp.sqrt(jnp.sum(w * (yr - mu_y) ** 2) / cnt)
+        std_y = jnp.where(std_y < 1e-12, 1.0, std_y)
+
+        mean_s = (v.T @ (a - mu_y * b)) / std_y
+        var_s = jnp.maximum(sv - jnp.sum(v * v, axis=0), 1e-12)
+        mean = mean_s * std_y + mu_y
+        std = jnp.sqrt(var_s) * std_y
+
+        if acquisition == "ei":
+            std_c = jnp.maximum(std, 1e-9)
+            imp = best_y - xi - mean
+            z = imp / std_c
+            cdf = 0.5 * (1 + jax.scipy.special.erf(z / math.sqrt(2)))
+            pdf = jnp.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+            acq = imp * cdf + std_c * pdf
+        else:                               # ucb (minimization, negated)
+            acq = -(mean - 2.0 * std)
+        acq = jnp.where(taken, -jnp.inf, acq)
+        i = jnp.argmax(acq)
+        taken = taken.at[i].set(True)
+
+        if S:                               # fantasy-append (skipped q=1)
+            x_new = cand[i]
+            lie = mean[i] if fantasy == "believer" else best_y
+            k_f_new = jnp.where(active, kfn(x_new[None], x_f, ls, sv)[0],
+                                0.0)
+            k_vec = jnp.concatenate([k_cx[i], k_f_new])
+            l, dg = chol_append(chol, k_vec, sv + noise_ss)
+            slot = jnp.minimum(j, S - 1)
+            row = m + slot
+            grow = j < S                    # the last pick appends nothing
+            chol = jnp.where(grow, chol.at[row, :].set(l.at[row].set(dg)),
+                             chol)
+            # grow the forward-substitution state by the appended row
+            col_c = kfn(cand, x_new[None], ls, sv)[:, 0]
+            v = jnp.where(grow, v.at[row, :].set((col_c - l @ v) / dg), v)
+            a = jnp.where(grow, a.at[row].set((lie - l @ a) / dg), a)
+            b = jnp.where(grow, b.at[row].set((1.0 - l @ b) / dg), b)
+            y_f = jnp.where(grow, y_f.at[slot].set(lie), y_f)
+            x_f = jnp.where(grow, x_f.at[slot, :].set(x_new), x_f)
+        return (chol, v, a, b, y_f, x_f, taken), i
+
+    _, picks = jax.lax.scan(step, carry0, jnp.arange(q))
+    return picks

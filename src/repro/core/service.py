@@ -197,11 +197,20 @@ class _ServiceBase:
         self._order.clear()
         return out
 
-    def poll(self, timeout: Optional[float] = 0.0) -> List[EvalResult]:
+    def poll(self, timeout: Optional[float] = 0.0,
+             min_results: int = 1) -> List[EvalResult]:
+        """Claim completed-but-unclaimed results.  A blocking poll
+        (``timeout != 0``) waits for at least ``min_results`` completions
+        — or for everything in flight to land, whichever comes first.
+        Drivers that coalesce tell waves (``Controller.run_async`` with
+        ``min_ask > 1``) use this to wake once per wave instead of once
+        per straggler; the default reproduces the one-completion wakeup
+        of the base protocol."""
         with self._cv:
             if timeout != 0.0:
                 self._cv.wait_for(
-                    lambda: self._order or not self._inflight, timeout)
+                    lambda: len(self._order) >= min_results
+                    or not self._inflight, timeout)
             return self._claim_all()
 
     def gather(self, tickets: Sequence[EvalTicket]) -> List[EvalResult]:
@@ -260,18 +269,25 @@ def _score_one(backend, cfg: Config) -> _Scored:
 def _score_batch(backend, cfgs: Sequence[Config]) -> List[_Scored]:
     """Batched scoring with per-config failure isolation: the backend's
     batch path is tried first (bit-compatible with the legacy evaluator
-    noise stream); if it raises, each config is retried alone so one bad
-    config fails one result, not the whole batch."""
+    noise stream); if it raises — or returns the wrong number of values,
+    which would otherwise orphan tickets and deadlock gather/drain — each
+    config is retried alone so one bad config fails one result, not the
+    whole batch."""
     try:
         detailed = getattr(backend, "evaluate_batch_detailed", None)
         if detailed is not None:
             vals, bds = detailed(cfgs)
-            return [(float(v), bool(bd.feasible), bd, "ok", "", None)
-                    for v, bd in zip(vals, bds)]
-        batch = getattr(backend, "evaluate_batch", None)
-        if batch is not None:
-            return [(float(v), True, None, "ok", "", None)
-                    for v in batch(cfgs)]
+            out = [(float(v), bool(bd.feasible), bd, "ok", "", None)
+                   for v, bd in zip(vals, bds)]
+            if len(out) == len(cfgs):
+                return out
+        else:
+            batch = getattr(backend, "evaluate_batch", None)
+            if batch is not None:
+                out = [(float(v), True, None, "ok", "", None)
+                       for v in batch(cfgs)]
+                if len(out) == len(cfgs):
+                    return out
     except Exception:
         pass                                # isolate the failure per config
     return [_score_one(backend, c) for c in cfgs]

@@ -111,6 +111,20 @@ class BOConfig:
     dynamic_boundary: bool = True
     boundary_tol: float = 0.05
     boundary_factor: float = 2.0
+    boundary_damping: bool = True   # k knobs triggering in ONE round each
+                                    # expand by factor**(1/k): a wide async
+                                    # wave inflates the domain volume by at
+                                    # most `boundary_factor` per round
+                                    # instead of factor**k
+    use_pallas: bool = False        # route Gram builds and candidate
+                                    # scoring through the kernels/gp_gram
+                                    # Pallas tile kernel (matern52; jnp
+                                    # fallback elsewhere)
+    refit_async: bool = False       # marginal-likelihood refit on a
+                                    # background executor over a snapshot
+                                    # of the trace: ask() never blocks on
+                                    # the Adam loop, selection runs against
+                                    # the last *completed* posterior
     seed: int = 0
 
 
@@ -164,13 +178,58 @@ class SearchStrategy(Protocol):
         ...
 
 
+def _config_key(cfg: Config) -> Tuple:
+    """Canonical hashable key with dict-equality semantics.  Numpy scalars
+    hash and compare like their Python values, and knob names are unique
+    within a config, so the sort never compares two values."""
+    return tuple(sorted(cfg.items(), key=lambda kv: kv[0]))
+
+
+class _PendingSet:
+    """Asked-but-untold probes keyed by canonical config tuple.
+
+    The legacy bookkeeping was ``list.remove`` with dict equality —
+    O(pending) dict comparisons per told probe, so a q-wide async wave
+    cost O(q·n).  Keyed FIFO buckets make the whole wave O(q).  An
+    optional payload rides along with each entry (the genetic strategy
+    keys its population index this way)."""
+
+    def __init__(self):
+        self._buckets: Dict[Tuple, List] = {}
+        self._n = 0
+
+    def add(self, cfg: Config, payload=None) -> None:
+        self._buckets.setdefault(_config_key(cfg), []).append(payload)
+        self._n += 1
+
+    def pop(self, cfg: Config) -> Tuple[bool, Optional[object]]:
+        """Remove the oldest pending entry equal to ``cfg``; returns
+        ``(matched, payload)`` — ``(False, None)`` when nothing matches
+        (an injected observation)."""
+        key = _config_key(cfg)
+        bucket = self._buckets.get(key)
+        if not bucket:
+            return False, None
+        payload = bucket.pop(0)
+        if not bucket:
+            del self._buckets[key]
+        self._n -= 1
+        return True, payload
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+
 class _StrategyBase:
     """Trace + pending-probe bookkeeping shared by every strategy."""
 
     def __init__(self, space: Space):
         self.space = space
         self.trace = Trace()
-        self._pending: List[Config] = []
+        self._pending = _PendingSet()
 
     def best(self) -> Tuple[Config, float]:
         if not self.trace.values:
@@ -178,11 +237,8 @@ class _StrategyBase:
         return self.trace.best
 
     def _match_pending(self, cfg: Config) -> bool:
-        try:
-            self._pending.remove(cfg)     # dict equality
-            return True
-        except ValueError:
-            return False
+        matched, _ = self._pending.pop(cfg)
+        return matched
 
 
 # ---------------------------------------------------------------------------
@@ -204,7 +260,14 @@ def _select_batch(state, cand: np.ndarray, best_y: float, q: int,
     outcome, recondition the posterior (fixed hyperparams, one Cholesky),
     repeat.  EI collapses at the fantasized probe — via the variance for
     the Kriging believer, via the mean for the constant liar — so later
-    picks spread over the pool instead of stacking on the first argmax."""
+    picks spread over the pool instead of stacking on the first argmax.
+
+    LEGACY REFERENCE PATH: q jit dispatches, q host argmax round trips
+    and q O(n³) Cholesky rebuilds per batch.  :class:`BOStrategy` now
+    selects through the device-resident :func:`repro.core.gp.select_batch`
+    (one compiled ``lax.scan``, O(n²) incremental Cholesky appends); this
+    loop remains as the oracle the equivalence tests and the
+    ``perf_gp_ask`` benchmark compare against."""
     cand32 = cand.astype(np.float32)
     taken = np.zeros(len(cand), bool)
     picks: List[np.ndarray] = []
@@ -233,11 +296,26 @@ class BOStrategy(_StrategyBase):
 
     ``ask`` serves the initial LHS design first, then per round: fit the
     GP to the whole trace (hyperparameters warm-started when configured),
-    select a constant-liar q-EI batch, enlarge any ``dynamic_bound``
-    boundary a probe is near (paper Fig. 4), and return the probes.
-    ``cfg.n_iter`` counts evaluations after the design, so the experiment
-    budget is identical for every batch width; asked-but-untold probes
-    count against the budget so an async driver cannot overshoot it.
+    select a q-EI batch through the device-resident
+    :func:`repro.core.gp.select_batch` (one compiled program: EI scoring,
+    masked argmax and O(n²) incremental-Cholesky fantasy appends for all
+    q picks), enlarge any ``dynamic_bound`` boundary a probe is near
+    (paper Fig. 4, volume-damped when several knobs trigger at once), and
+    return the probes.  ``cfg.n_iter`` counts evaluations after the
+    design, so the experiment budget is identical for every batch width;
+    asked-but-untold probes count against the budget so an async driver
+    cannot overshoot it.
+
+    With ``cfg.refit_async`` the marginal-likelihood refit runs on a
+    background executor over a snapshot of the trace: ``ask`` selects
+    against the last *completed* posterior and never blocks on the Adam
+    loop (only the first post-design ask fits synchronously — there is no
+    posterior to reuse yet).  The async experiment loop then submits new
+    waves at evaluation speed regardless of ``fit_steps``.  Candidates
+    are drawn in the *current* space while the posterior may predate a
+    boundary expansion — the same approximation the constant liar already
+    makes, traded for never idling the cluster.  :meth:`close` joins the
+    executor (the strategy stays usable afterwards).
     """
 
     def __init__(self, space: Space, cfg: Optional[BOConfig] = None,
@@ -248,15 +326,116 @@ class BOStrategy(_StrategyBase):
         self._init_queue = init_design(space, self.cfg.n_init, self.rng,
                                        init_configs)
         self._n_init = len(self._init_queue)
-        self._pending_init: List[Config] = []
+        self._pending_init = _PendingSet()
         self._params = None                  # warm-start carry
         self._pad_to: Optional[int] = None   # budget-pinned jit shape
         self._evals_done = 0                 # told post-init evaluations
+        # refit_async machinery (all driver-thread state except the
+        # executor's own worker; the background task is a pure gp.fit)
+        self._posterior = None               # (state, x, y) last completed
+        self._refit_future = None
+        self._refit_snapshot = None          # (x, y) the in-flight fit sees
+        self._refit_len = 0                  # trace length it was given
+        self._refit_pool = None
 
     @property
     def finished(self) -> bool:
         return (not self._init_queue and not self._pending_init
                 and self._evals_done >= self.cfg.n_iter)
+
+    # -- GP fitting (sync + background) ---------------------------------------
+
+    def _fit_args(self):
+        cfg = self.cfg
+        steps = cfg.fit_steps
+        warm = None
+        if cfg.warm_start and self._params is not None:
+            warm = self._params
+            steps = (cfg.fit_steps_warm if cfg.fit_steps_warm is not None
+                     else max(cfg.fit_steps // 3, 20))
+        return warm, steps
+
+    def _fit_gp(self, x: np.ndarray, y: np.ndarray):
+        warm, steps = self._fit_args()
+        cfg = self.cfg
+        return gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
+                      pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+
+    def _refit(self, x: np.ndarray, y: np.ndarray):
+        """refit_async: harvest a landed background fit and return the
+        last completed posterior *with the data it was fitted on* —
+        fantasy appends must extend the matrix the Cholesky factors.
+        The first post-design round fits synchronously (nothing to select
+        against yet)."""
+        fut = self._refit_future
+        if fut is not None and fut.done():
+            self._refit_future = None
+            state = fut.result()            # a failed fit surfaces here
+            self._posterior = (state,) + self._refit_snapshot
+            self._params = state.params
+        if self._posterior is None:
+            state = self._fit_gp(x, y)
+            self._params = state.params
+            self._posterior = (state, x, y)
+            self._refit_len = len(self.trace.values)
+        return self._posterior
+
+    def _refit_kick(self, x: np.ndarray, y: np.ndarray):
+        """Kick a background refit on the (x, y) snapshot when fresh
+        observations arrived.  Called at the END of ask — after the
+        selection's device work has completed — so on a single shared
+        accelerator the refit's computation queues behind this round's
+        selection, never in front of the next one the driver is about to
+        dispatch."""
+        if (self._refit_future is not None
+                or len(self.trace.values) <= self._refit_len):
+            return
+        warm, steps = self._fit_args()
+        cfg = self.cfg
+        self._refit_len = len(self.trace.values)
+        self._refit_snapshot = (x, y)
+        if self._refit_pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._refit_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="gp-refit")
+        self._refit_future = self._refit_pool.submit(
+            gp.fit, x, y, cfg.kernel, steps=steps, params=warm,
+            pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+
+    def close(self):
+        """Join the background refit executor (refit_async mode).  An
+        in-flight fit is waited out and discarded; the strategy remains
+        usable — a later ask() restarts the executor."""
+        pool, self._refit_pool = self._refit_pool, None
+        self._refit_future = None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    # -- dynamic boundary (paper Fig. 4) --------------------------------------
+
+    def _expand_near(self, probes: Sequence[Config]) -> List[str]:
+        """Enlarge every dynamic bound a probe is near, once over the
+        whole batch.  With ``boundary_damping``, k simultaneous events
+        expand each knob by ``factor**(1/k)`` — k knobs at the full
+        factor would multiply the domain volume by factor**k in a single
+        round, over-inflating it exactly when wide async waves coalesce."""
+        cfg = self.cfg
+        if not cfg.dynamic_boundary:
+            return []
+        near: List[str] = []
+        for probe in probes:
+            for name in self.space.near_boundary(probe, cfg.boundary_tol):
+                if name not in near:
+                    near.append(name)
+        if near:
+            factor = cfg.boundary_factor
+            if cfg.boundary_damping and len(near) > 1:
+                factor = factor ** (1.0 / len(near))
+            self.space = self.space.expand_boundaries(near, factor)
+            at = self._evals_done + len(self._pending)
+            for name in near:
+                self.trace.boundary_events.append((at, name))
+        return near
 
     def ask(self, n: Optional[int] = None) -> List[Config]:
         # -- initial design ---------------------------------------------------
@@ -266,7 +445,8 @@ class BOStrategy(_StrategyBase):
             chunk, self._init_queue = (self._init_queue[:k],
                                        self._init_queue[k:])
             out = [dict(c) for c in chunk]
-            self._pending_init += [dict(c) for c in out]
+            for c in out:
+                self._pending_init.add(c)
             return out
         if not self.trace.values:
             return []                        # blocked: nothing observed yet
@@ -279,22 +459,20 @@ class BOStrategy(_StrategyBase):
                     remaining), 1)
         if self._pad_to is None:
             # fix the padded GP shape for the whole run: every jit (fit
-            # scan, posterior build, EI) compiles once, not per size bucket
+            # scan, posterior build, select_batch) compiles once, not per
+            # size bucket
             self._pad_to = gp._bucket(self._n_init + self.cfg.n_iter)
         cfg = self.cfg
         x = self.space.encode_batch(self.trace.configs)
         y = np.asarray(self.trace.values, np.float64)
         if cfg.log_objective:
             y = np.log(np.maximum(y, 1e-12))
-        steps = cfg.fit_steps
-        warm = None
-        if cfg.warm_start and self._params is not None:
-            warm = self._params
-            steps = (cfg.fit_steps_warm if cfg.fit_steps_warm is not None
-                     else max(cfg.fit_steps // 3, 20))
-        state = gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
-                       pad_to=self._pad_to)
-        self._params = state.params
+        if cfg.refit_async:
+            state, x_fit, y_fit = self._refit(x, y)
+        else:
+            state = self._fit_gp(x, y)
+            self._params = state.params
+            x_fit, y_fit = x, y
 
         # candidates: global LHS + Gaussian ball + per-knob incumbent
         # mutations.  The Gaussian ball almost never crosses a bool /
@@ -313,35 +491,44 @@ class BOStrategy(_StrategyBase):
                 m[j] = u
                 sweeps.append(m)
         cand = np.vstack([cand, local, np.asarray(sweeps)])
-        best_y = float(np.min(y))
-        picks = _select_batch(state, cand, best_y, q, cfg, x, y,
-                              self._pad_to)
+
+        # device-resident q-EI: the whole batch — EI scoring, masked
+        # argmax, incremental-Cholesky fantasy appends — is ONE compiled
+        # call at the budget-pinned padded shape (the per-pick rebuild
+        # loop survives as _select_batch, the reference oracle).  The
+        # scan length is bucketed to a multiple of batch_size: an async
+        # driver frees rooms of 1..max_in_flight, and q is a static jit
+        # shape — without bucketing every distinct width would recompile
+        # the scan mid-run.  Greedy selection is prefix-stable, so the
+        # first q of a longer scan ARE the q-pick selection.
+        n_fit = len(y_fit)
+        best_y = float(np.min(y_fit))
+        y_raw = np.zeros(int(state.x.shape[0]), np.float32)
+        y_raw[:n_fit] = np.asarray(y_fit, np.float32)
+        q_sel = cfg.batch_size * -(-q // cfg.batch_size)
+        idx = np.asarray(gp.select_batch(
+            state, cand.astype(np.float32), y_raw, n_fit, best_y, q_sel,
+            kind=cfg.kernel, fantasy=cfg.fantasy,
+            acquisition=cfg.acquisition, use_pallas=cfg.use_pallas))
+        picks = [cand[int(i)] for i in idx[:q]]
         probes = self.space.decode_batch(np.stack(picks))
+        if cfg.refit_async:
+            # selection has device-synced (np.asarray above): the refit's
+            # computation queues strictly after it
+            self._refit_kick(x, y)
 
-        # -- dynamic boundary (paper Fig. 4), once over the whole batch -------
-        if cfg.dynamic_boundary:
-            near: List[str] = []
-            for probe in probes:
-                for name in self.space.near_boundary(probe, cfg.boundary_tol):
-                    if name not in near:
-                        near.append(name)
-            if near:
-                self.space = self.space.expand_boundaries(
-                    near, cfg.boundary_factor)
-                at = self._evals_done + len(self._pending)
-                for name in near:
-                    self.trace.boundary_events.append((at, name))
-
-        self._pending += [dict(c) for c in probes]
+        self._expand_near(probes)
+        for c in probes:
+            self._pending.add(c)
         return probes
 
     def tell(self, configs: Sequence[Config], values: Sequence[float]):
         configs = [dict(c) for c in configs]
         self.trace.extend(configs, values)
         for c in configs:
-            if c in self._pending_init:
-                self._pending_init.remove(c)
-            elif self._match_pending(c):
+            if self._pending_init.pop(c)[0]:
+                continue
+            if self._match_pending(c):
                 self._evals_done += 1
             # else: injected observation — free information, no budget
 
@@ -382,7 +569,8 @@ class RandomStrategy(_StrategyBase):
             chunk = self.space.decode_batch(
                 lhs_unit(self.rng, k, len(self.space)))
         out = [dict(c) for c in chunk]
-        self._pending += [dict(c) for c in out]
+        for c in out:
+            self._pending.add(c)
         return out
 
     def tell(self, configs: Sequence[Config], values: Sequence[float]):
@@ -433,7 +621,8 @@ class AnnealingStrategy(_StrategyBase):
             prop_u = np.clip(u + self.rng.normal(0, self.cfg.sigma, d), 0, 1)
             out.append(self.space.from_unit(prop_u))
         out = [dict(c) for c in out]
-        self._pending += [dict(c) for c in out]
+        for c in out:
+            self._pending.add(c)
         return out
 
     def tell(self, configs: Sequence[Config], values: Sequence[float]):
@@ -476,7 +665,7 @@ class GeneticStrategy(_StrategyBase):
         self._pop: List[Config] = [space.from_unit(u) for u in pop_u]
         self._fit: List[Optional[float]] = [None] * len(self._pop)
         self._queue: List[int] = list(range(len(self._pop)))
-        self._pending_idx: List[Tuple[int, Config]] = []
+        self._pending_idx = _PendingSet()    # payload: population index
         self._init_gen = True
         self._told = 0
 
@@ -502,7 +691,7 @@ class GeneticStrategy(_StrategyBase):
         out: List[Config] = []
         for i in idxs:
             c = dict(self._pop[i])
-            self._pending_idx.append((i, dict(c)))
+            self._pending_idx.add(c, i)
             out.append(c)
         return out
 
@@ -510,12 +699,10 @@ class GeneticStrategy(_StrategyBase):
         configs = [dict(c) for c in configs]
         self.trace.extend(configs, values)
         for c, v in zip(configs, values):
-            for j, (i, pc) in enumerate(self._pending_idx):
-                if pc == c:
-                    self._pending_idx.pop(j)
-                    self._fit[i] = float(v)
-                    self._told += 1
-                    break
+            matched, i = self._pending_idx.pop(c)
+            if matched:
+                self._fit[i] = float(v)
+                self._told += 1
         self._maybe_evolve()
 
     def _maybe_evolve(self):

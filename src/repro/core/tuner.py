@@ -200,16 +200,23 @@ class Sapphire:
         search_ctrl = ctrl.with_tag(strategy).with_prepare(_full)
         bs = None if strategy == "bo" else self.batch_size
         if self.async_eval:
-            # default depth = the Experiment-Unit round width: sync
+            # default depth = the search's actual round width — the BO
+            # strategy's own q when a bo_config overrides it, so a
+            # q-batch search is not squeezed into 1-probe asks: sync
             # pacing with streamed tells; raise async_max_in_flight to
             # keep a slow streaming service saturated through refits
+            width = max(self.batch_size,
+                        bo_cfg.batch_size if strategy == "bo" else 1)
             trace = search_ctrl.run_async(
                 strat, batch_size=bs,
-                max_in_flight=self.async_max_in_flight or self.batch_size,
+                max_in_flight=self.async_max_in_flight or width,
                 min_ask=self.async_min_ask)
         else:
             trace = search_ctrl.run(strat, batch_size=bs)
         best_sub, best_v = strat.best()
+        close = getattr(strat, "close", None)
+        if close is not None:
+            close()        # join a refit_async background executor, if any
         return _full(best_sub), best_v, trace, strat.space
 
     # ---- stage 3: baseline probes + report -----------------------------------

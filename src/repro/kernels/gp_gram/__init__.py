@@ -1,0 +1,12 @@
+"""Pallas TPU Matérn-5/2 Gram kernels for the GP surrogate.
+
+Consumers: ``gp.fit``/``gp.predict`` (posterior builds) and
+``gp.select_batch`` (the device-resident q-EI candidate cross-Gram),
+all behind ``BOConfig.use_pallas`` with the jnp kernels as fallback.
+"""
+
+from repro.kernels.gp_gram.ops import matern52_cross, matern52_gram
+from repro.kernels.gp_gram.ref import matern52_cross_ref, matern52_gram_ref
+
+__all__ = ["matern52_gram", "matern52_cross",
+           "matern52_gram_ref", "matern52_cross_ref"]

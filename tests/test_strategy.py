@@ -391,3 +391,143 @@ class TestCompleter:
         assert strat.trace.boundary_events      # enlargement happened
         assert max(c["x"] for c in seen) > 8.0  # ...and reached the evaluator
         assert max(r.config["x"] for r in db.records) > 8.0
+
+
+# ---------------------------------------------------------------------------
+# dynamic-boundary damping: wide waves must not over-inflate the domain
+# ---------------------------------------------------------------------------
+
+class TestBoundaryDamping:
+    def _dyn_space(self):
+        return Space((Knob("a", "float", 4.0, lo=1.0, hi=8.0,
+                           dynamic_bound=True),
+                      Knob("b", "float", 4.0, lo=1.0, hi=8.0,
+                           dynamic_bound=True)))
+
+    def test_simultaneous_events_are_damped(self):
+        """Two knobs triggering in ONE round each expand by factor**(1/2):
+        the round's domain-volume growth stays at `boundary_factor`
+        instead of factor²."""
+        strat = BOStrategy(self._dyn_space(), BOConfig(boundary_factor=4.0))
+        near = strat._expand_near([{"a": 7.9, "b": 7.9}])
+        assert sorted(near) == ["a", "b"]
+        # span 7, damped factor 4**(1/2)=2: hi' = 8 + 7·(2-1)/2 = 11.5
+        assert strat.space.knob("a").hi == pytest.approx(11.5)
+        assert strat.space.knob("b").hi == pytest.approx(11.5)
+        assert len(strat.trace.boundary_events) == 2
+
+    def test_single_event_keeps_full_factor(self):
+        strat = BOStrategy(self._dyn_space(), BOConfig(boundary_factor=4.0))
+        near = strat._expand_near([{"a": 7.9, "b": 4.0}])
+        assert near == ["a"]
+        # span 7, full factor 4: hi' = 8 + 7·(4-1)/2 = 18.5
+        assert strat.space.knob("a").hi == pytest.approx(18.5)
+        assert strat.space.knob("b").hi == 8.0
+
+    def test_damping_off_restores_legacy(self):
+        strat = BOStrategy(self._dyn_space(),
+                           BOConfig(boundary_factor=4.0,
+                                    boundary_damping=False))
+        strat._expand_near([{"a": 7.9, "b": 7.9}])
+        assert strat.space.knob("a").hi == pytest.approx(18.5)
+        assert strat.space.knob("b").hi == pytest.approx(18.5)
+
+
+# ---------------------------------------------------------------------------
+# keyed pending probes: O(q) tells, dict-equality semantics preserved
+# ---------------------------------------------------------------------------
+
+class TestPendingKeying:
+    def test_fifo_payloads_and_counts(self):
+        from repro.core.strategy import _PendingSet
+        ps = _PendingSet()
+        cfg = {"x": 0.5, "k": 4}
+        ps.add(cfg, "first")
+        ps.add(dict(cfg), "second")             # duplicate probe
+        ps.add({"x": 0.9, "k": 4}, "other")
+        assert len(ps) == 3 and ps
+        assert ps.pop({"k": 4, "x": 0.5}) == (True, "first")   # key order
+        assert ps.pop(cfg) == (True, "second")                 # FIFO
+        assert ps.pop(cfg) == (False, None)     # now an injected obs
+        assert len(ps) == 1
+
+    def test_numpy_scalars_match_python_values(self):
+        from repro.core.strategy import _PendingSet
+        ps = _PendingSet()
+        ps.add({"x": np.float64(0.5), "k": np.int64(4), "b": np.bool_(True)})
+        assert ps.pop({"x": 0.5, "k": 4, "b": True})[0]
+        assert len(ps) == 0
+
+    def test_wide_wave_tell_is_linear(self):
+        """A q-wide out-of-order tell costs O(q) bucket pops, not O(q·n)
+        list scans — same observable behavior as the legacy path."""
+        strat = RandomStrategy(_space(), 64, seed=0, batch_size=64)
+        cfgs = strat.ask()
+        strat.tell(cfgs[::-1], [_f(c) for c in cfgs[::-1]])
+        assert strat.finished
+        assert len(strat._pending) == 0
+
+
+# ---------------------------------------------------------------------------
+# background GP refit: ask() never blocks on the Adam loop
+# ---------------------------------------------------------------------------
+
+class TestRefitAsync:
+    def _patch_slow_fit(self, monkeypatch, delay, calls):
+        import threading
+        import time as _time
+
+        from repro.core import gp as gp_mod
+        real_fit = gp_mod.fit
+
+        def slow_fit(*a, **k):
+            calls.append(threading.current_thread().name)
+            _time.sleep(delay)
+            return real_fit(*a, **k)
+
+        monkeypatch.setattr(gp_mod, "fit", slow_fit)
+
+    def test_ask_uses_stale_posterior_without_blocking(self, monkeypatch):
+        import time as _time
+
+        delay = 0.4
+        calls = []
+        self._patch_slow_fit(monkeypatch, delay, calls)
+        cfg = BOConfig(n_init=4, n_iter=8, batch_size=2, n_candidates=32,
+                       fit_steps=5, refit_async=True)
+        strat = BOStrategy(_space(), cfg)
+        init = strat.ask()
+        strat.tell(init, [_f(c) for c in init])
+        p1 = strat.ask()                 # first BO ask: synchronous fit
+        assert p1
+        strat.tell(p1, [_f(c) for c in p1])
+        t0 = _time.monotonic()
+        p2 = strat.ask()                 # stale posterior, background refit
+        dt = _time.monotonic() - t0
+        assert p2 and dt < delay / 2
+        strat.tell(p2, [_f(c) for c in p2])
+        while not strat.finished:        # completes despite staleness
+            ps = strat.ask()
+            strat.tell(ps, [_f(c) for c in ps])
+        strat.close()
+        assert any("gp-refit" in name for name in calls)
+        assert len(strat.trace.values) == 4 + 8
+
+    def test_run_async_submission_independent_of_fit(self, monkeypatch):
+        """The acceptance property: with refit_async the overlapped
+        loop's submission latency does not contain the fit — at most the
+        one synchronous first-round fit exceeds a fraction of the fit
+        delay."""
+        delay = 0.3
+        calls = []
+        self._patch_slow_fit(monkeypatch, delay, calls)
+        cfg = BOConfig(n_init=4, n_iter=6, batch_size=2, n_candidates=32,
+                       fit_steps=5, refit_async=True)
+        strat = BOStrategy(_space(), cfg)
+        lat = []
+        ctrl = Controller(_f, EvalDB())
+        trace = ctrl.run_async(strat, on_ask=lambda n, s: lat.append(s))
+        strat.close()
+        assert len(trace.values) == 4 + 6
+        slow = [s for s in lat if s > delay / 2]
+        assert len(slow) <= 1            # only the first-round sync fit
