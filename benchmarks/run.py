@@ -13,6 +13,7 @@ One module per paper table/figure (DESIGN.md §7):
   perf_batch  batched vs sequential evaluation pipeline wall-clock
   perf_async  async vs synchronous experiment loop on a latency-bound service
   perf_gp_ask device-resident q-EI selection + background GP refit
+  perf_multi_device  sharded candidate scoring + kernel-autotune dogfood
 
 ``--json [PATH]`` writes per-benchmark wall-clock timings and statuses to
 an artifacts JSON (default artifacts/bench/run_timings.json) so the perf
@@ -30,8 +31,8 @@ from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig5_effectiveness, fig5b_compiled_transfer,
                         fig6_ranking, fig7_topk_efficiency,
                         fig8_two_fidelity, perf_async_service,
-                        perf_batch_pipeline, perf_gp_ask, roofline_table,
-                        sec34_optimizers, table2_top16)
+                        perf_batch_pipeline, perf_gp_ask, perf_multi_device,
+                        roofline_table, sec34_optimizers, table2_top16)
 
 MODULES = [
     ("fig2b_response_surface", fig2b_response_surface),
@@ -47,6 +48,7 @@ MODULES = [
     ("perf_batch_pipeline", perf_batch_pipeline),
     ("perf_async_service", perf_async_service),
     ("perf_gp_ask", perf_gp_ask),
+    ("perf_multi_device", perf_multi_device),
 ]
 
 

@@ -56,14 +56,20 @@ def minimize(f: Callable[[Config], float], space: Space,
     cfg = cfg or BOConfig()
     use_batch = cfg.batch_size > 1 and f_batch is not None
     strat = BOStrategy(space, cfg, init_configs=init_configs)
-    while not strat.finished:
-        probes = strat.ask()
-        if not probes:
-            break
-        if use_batch:
-            values = f_batch(probes)
-        else:
-            values = [float(f(c)) for c in probes]
-        strat.tell(probes, values)
+    try:
+        while not strat.finished:
+            probes = strat.ask()
+            if not probes:
+                break
+            if use_batch:
+                values = f_batch(probes)
+            else:
+                values = [float(f(c)) for c in probes]
+            strat.tell(probes, values)
+    finally:
+        # refit_async spawns a background executor (possibly pinned to a
+        # spare device); legacy callers never see the strategy, so the
+        # wrapper owns the join.
+        strat.close()
     best_c, best_v = strat.best()
     return best_c, best_v, strat.trace, strat.space

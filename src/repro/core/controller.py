@@ -46,6 +46,30 @@ from repro.core.service import (DEFAULT_FIDELITY, EvalRequest, EvalResult,
 from repro.core.space import Config, Space
 from repro.core.strategy import SearchStrategy, Trace
 
+# default in-flight cap: this many strategy batch widths may be pending
+# before run_async stops submitting (see _batch_width)
+_IN_FLIGHT_WIDTH_FACTOR = 4
+
+
+def _batch_width(strategy: SearchStrategy,
+                 batch_size: Optional[int]) -> int:
+    """The strategy's preferred probes-per-ask, for run_async's default
+    in-flight cap: the driver's explicit ``batch_size``, else the
+    strategy's own width (``RandomStrategy.batch_size``,
+    ``BOConfig.batch_size``, the GA population), else 1."""
+    if batch_size:
+        return int(batch_size)
+    w = getattr(strategy, "batch_size", None)
+    if w:
+        return int(w)
+    cfg = getattr(strategy, "cfg", None)
+    if cfg is not None:
+        for name in ("batch_size", "population"):
+            w = getattr(cfg, name, None)
+            if w:
+                return int(w)
+    return 1
+
 
 @dataclass
 class EvalRecord:
@@ -338,8 +362,17 @@ class Controller:
         accidentally beat genuine values; only if the whole run fails is
         the fallback ``1e6`` used (no best exists to corrupt then).
 
-        ``max_in_flight`` caps concurrent submissions (default: the
-        strategy's own pending-probe accounting is the only cap);
+        ``max_in_flight`` caps concurrent submissions.  The default
+        (``None``) caps at ``4 ×`` the strategy's batch width
+        (:func:`_batch_width`): a slow service can no longer absorb the
+        whole remaining budget against one stale posterior — submission
+        pauses until results land and the surrogate catches up.  The
+        automatic cap only *gates* further asks, it never shapes an
+        ask's width (an explicit ``max_in_flight`` does both, via
+        ``room`` below), so on an immediate service — where results land
+        before the next ask and nothing ever accumulates — traces are
+        unchanged.  Pass ``max_in_flight <= 0`` for the old unbounded
+        behavior;
         ``min_ask > 1`` coalesces completion waves — with probes still in
         flight, the loop waits until that many slots are free before the
         next ``ask``, so an expensive proposer (a GP refit per ask) is
@@ -368,6 +401,12 @@ class Controller:
         (see ``benchmarks/perf_gp_ask.py``).
         """
         svc = self.service
+        auto_cap = auto_width = None
+        if max_in_flight is None:
+            auto_width = _batch_width(strategy, batch_size)
+            auto_cap = _IN_FLIGHT_WIDTH_FACTOR * auto_width
+        elif max_in_flight <= 0:
+            max_in_flight = None                         # explicit unbounded
         pending: Dict[int, Tuple[Config, Config]] = {}   # uid -> (asked,
         spent = 0                                        #         prepared)
         rnd = 0
@@ -389,6 +428,10 @@ class Controller:
                     return          # landed results first: fresher asks
                 if budget is not None and spent >= budget:
                     return
+                if (auto_cap is not None and pending
+                        and len(pending) + auto_width > auto_cap):
+                    return      # bounded staleness: the next ask-wide
+                    #             wave would push in-flight past the cap
                 room = None
                 if max_in_flight is not None:
                     room = max_in_flight - len(pending)

@@ -460,3 +460,222 @@ def select_batch(state: GPState, cand, y_raw, n, best_y, q: int,
 
     _, picks = jax.lax.scan(step, carry0, jnp.arange(q))
     return picks
+
+
+# ---------------------------------------------------------------------------
+# sharded q-batch selection (multi-device candidate pool)
+# ---------------------------------------------------------------------------
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def _select_scan_sharded(state: GPState, cand_l, taken0_l, y_raw, n, best_y,
+                         xi, *, q: int, kind: str, fantasy: str,
+                         acquisition: str, use_pallas: bool,
+                         axis: str = "pool"):
+    """Shard-local body of :func:`select_batch_sharded`.
+
+    Runs under ``shard_map``/``pmap`` with ``cand_l`` [Ml, d] the local
+    shard of the pool and everything else replicated.  Mirrors
+    :func:`select_batch` step for step; the only cross-device traffic per
+    pick is the argmax reduction (one pmax + one pmin) and three masked
+    psum gathers of the winner's row — O(m + d) floats, independent of
+    pool size.
+
+    Bit-exactness contract: the replicated carry (chol/a/b/fantasy
+    block) sees exactly the arithmetic of the single-device path, and the
+    per-candidate columns (v, mean, acq) are computed per shard with the
+    same per-column ops.  The collective argmax reproduces jnp.argmax's
+    first-occurrence tie-break: take the max acquisition via ``pmax``,
+    then the *smallest global index* attaining it via ``pmin`` (losing
+    shards contribute int32-max).  Exactly one shard owns the winner, so
+    each masked psum adds the winner's row to zeros — no rounding.
+    """
+    m, d_dim = state.x.shape
+    Ml = cand_l.shape[0]
+    S = q - 1
+    T = m + S
+    ls = jnp.exp(state.params.log_lengthscale)
+    sv = jnp.exp(state.params.log_signal_var)
+    nv = jnp.exp(state.params.log_noise_var)
+    kfn = KERNELS[kind]
+    cand_l = cand_l.astype(jnp.float32)
+    y_raw = y_raw.astype(jnp.float32)
+    best_y = jnp.asarray(best_y, jnp.float32)
+    idx0 = jax.lax.axis_index(axis).astype(jnp.int32) * Ml
+
+    if use_pallas and kind == "matern52":
+        from repro.kernels.gp_gram.ops import matern52_cross
+        k_cx = matern52_cross(cand_l, state.x, ls, sv)      # [Ml, m]
+    else:
+        k_cx = kfn(cand_l, state.x, ls, sv)                 # [Ml, m]
+
+    chol0 = jnp.zeros((T, T), jnp.float32)
+    chol0 = chol0.at[:m, :m].set(state.chol)
+    if S:
+        fdiag = jnp.arange(m, T)
+        chol0 = chol0.at[fdiag, fdiag].set(1.0)
+    real = jnp.arange(m) < n
+    noise_ss = _jitter(nv, sv)
+
+    y_masked = jnp.where(real, y_raw, 0.0)
+    v0 = jnp.zeros((T, Ml), jnp.float32)
+    v0 = v0.at[:m, :].set(jax.scipy.linalg.solve_triangular(
+        state.chol, k_cx.T, lower=True))
+    a0 = jnp.zeros((T,), jnp.float32)
+    a0 = a0.at[:m].set(jax.scipy.linalg.solve_triangular(
+        state.chol, y_masked, lower=True))
+    b0 = jnp.zeros((T,), jnp.float32)
+    b0 = b0.at[:m].set(jax.scipy.linalg.solve_triangular(
+        state.chol, real.astype(jnp.float32), lower=True))
+
+    carry0 = (
+        chol0, v0, a0, b0,
+        jnp.zeros((S,), jnp.float32),
+        jnp.zeros((S, d_dim), jnp.float32),
+        taken0_l,                           # pool pads pre-marked taken
+    )
+
+    def step(carry, j):
+        chol, v, a, b, y_f, x_f, taken = carry
+        active = jnp.arange(S) < j if S else jnp.zeros((0,), bool)
+        w = jnp.concatenate([real, active]).astype(jnp.float32)
+        yr = jnp.concatenate([y_masked, jnp.where(active, y_f, 0.0)])
+        cnt = jnp.sum(w)
+        mu_y = jnp.sum(yr) / cnt
+        std_y = jnp.sqrt(jnp.sum(w * (yr - mu_y) ** 2) / cnt)
+        std_y = jnp.where(std_y < 1e-12, 1.0, std_y)
+
+        mean_s = (v.T @ (a - mu_y * b)) / std_y             # [Ml]
+        var_s = jnp.maximum(sv - jnp.sum(v * v, axis=0), 1e-12)
+        mean = mean_s * std_y + mu_y
+        std = jnp.sqrt(var_s) * std_y
+
+        if acquisition == "ei":
+            std_c = jnp.maximum(std, 1e-9)
+            imp = best_y - xi - mean
+            z = imp / std_c
+            cdf = 0.5 * (1 + jax.scipy.special.erf(z / math.sqrt(2)))
+            pdf = jnp.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+            acq = imp * cdf + std_c * pdf
+        else:
+            acq = -(mean - 2.0 * std)
+        acq = jnp.where(taken, -jnp.inf, acq)
+
+        # collective first-occurrence argmax over the global pool
+        li = jnp.argmax(acq).astype(jnp.int32)
+        lmax = acq[li]
+        gmax = jax.lax.pmax(lmax, axis)
+        gi = jax.lax.pmin(
+            jnp.where(lmax == gmax, idx0 + li, _INT32_MAX), axis)
+        off = gi - idx0
+        has = (off >= 0) & (off < Ml)       # this shard owns the winner
+        il = jnp.clip(off, 0, Ml - 1)
+        taken = jnp.where(has, taken.at[il].set(True), taken)
+
+        # replicate the winner's row: exactly one shard contributes
+        x_new = jax.lax.psum(
+            jnp.where(has, cand_l[il], jnp.zeros((d_dim,), jnp.float32)),
+            axis)
+        k_ci = jax.lax.psum(
+            jnp.where(has, k_cx[il], jnp.zeros((m,), jnp.float32)), axis)
+        mean_i = jax.lax.psum(jnp.where(has, mean[il], 0.0), axis)
+
+        if S:
+            lie = mean_i if fantasy == "believer" else best_y
+            k_f_new = jnp.where(active, kfn(x_new[None], x_f, ls, sv)[0],
+                                0.0)
+            k_vec = jnp.concatenate([k_ci, k_f_new])
+            l, dg = chol_append(chol, k_vec, sv + noise_ss)
+            slot = jnp.minimum(j, S - 1)
+            row = m + slot
+            grow = j < S
+            chol = jnp.where(grow, chol.at[row, :].set(l.at[row].set(dg)),
+                             chol)
+            col_c = kfn(cand_l, x_new[None], ls, sv)[:, 0]
+            v = jnp.where(grow, v.at[row, :].set((col_c - l @ v) / dg), v)
+            a = jnp.where(grow, a.at[row].set((lie - l @ a) / dg), a)
+            b = jnp.where(grow, b.at[row].set((1.0 - l @ b) / dg), b)
+            y_f = jnp.where(grow, y_f.at[slot].set(lie), y_f)
+            x_f = jnp.where(grow, x_f.at[slot, :].set(x_new), x_f)
+        return (chol, v, a, b, y_f, x_f, taken), gi
+
+    _, picks = jax.lax.scan(step, carry0, jnp.arange(q))
+    return picks
+
+
+# compiled sharded selectors, keyed by (devices, q, kind, fantasy,
+# acquisition, use_pallas, use_shard_map) — shapes retrace under jit/pmap
+_SHARDED_CACHE: dict = {}
+
+
+def _sharded_fn(devs, q, kind, fantasy, acquisition, use_pallas,
+                use_shard_map):
+    key = (devs, q, kind, fantasy, acquisition, use_pallas, use_shard_map)
+    fn = _SHARDED_CACHE.get(key)
+    if fn is not None:
+        return fn
+    body = partial(_select_scan_sharded, q=q, kind=kind, fantasy=fantasy,
+                   acquisition=acquisition, use_pallas=use_pallas)
+    if use_shard_map:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        mesh = Mesh(np.array(devs), ("pool",))
+        fn = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P("pool"), P("pool"), P(), P(), P(), P()),
+            out_specs=P(), check_rep=False))
+    else:
+        fn = jax.pmap(body, axis_name="pool",
+                      in_axes=(None, 0, 0, None, None, None, None),
+                      devices=list(devs))
+    _SHARDED_CACHE[key] = fn
+    return fn
+
+
+def select_batch_sharded(state: GPState, cand, y_raw, n, best_y, q: int,
+                         kind: str = "matern52", fantasy: str = "liar",
+                         acquisition: str = "ei", xi: float = 0.01,
+                         use_pallas: bool = False, devices=None,
+                         use_shard_map: Optional[bool] = None):
+    """:func:`select_batch` with the candidate pool sharded over devices.
+
+    The pool (LHS + local ball + axis sweeps, [M, d]) is split row-wise
+    across ``devices`` (default: all host devices); each device scores
+    its shard against the replicated posterior and a masked all-reduce
+    argmax picks every winner.  Per-pick traffic is O(m + d) — constant
+    in pool size — so M can grow with ``jax.device_count()`` at constant
+    wall-clock.
+
+    Picks are bit-identical to :func:`select_batch` on the same pool (see
+    :func:`_select_scan_sharded` for the tie-break argument).  The pool
+    is padded to a multiple of the device count with unit-cube midpoints
+    pre-marked taken, so padding never changes a pick.
+
+    ``use_shard_map`` selects the mesh entry point: ``shard_map`` (the
+    mesh-native path, default off-CPU) or ``pmap`` (the CPU-host
+    fallback, where forced host devices lack a true mesh runtime).
+    """
+    devs = tuple(devices) if devices is not None else tuple(jax.devices())
+    nd = len(devs)
+    if use_shard_map is None:
+        use_shard_map = devs[0].platform != "cpu"
+    cand = jnp.asarray(cand, jnp.float32)
+    M, d = cand.shape
+    Ml = -(-M // nd)
+    Mp = Ml * nd
+    if Mp > M:
+        cand = jnp.concatenate(
+            [cand, jnp.full((Mp - M, d), 0.5, jnp.float32)])
+    taken0 = jnp.arange(Mp) >= M
+    fn = _sharded_fn(devs, q, kind, fantasy, acquisition, bool(use_pallas),
+                     bool(use_shard_map))
+    y_raw = jnp.asarray(y_raw, jnp.float32)
+    n = jnp.asarray(n, jnp.int32)
+    best_y = jnp.asarray(best_y, jnp.float32)
+    xi = jnp.asarray(xi, jnp.float32)
+    if use_shard_map:
+        return fn(state, cand, taken0, y_raw, n, best_y, xi)
+    picks = fn(state, cand.reshape(nd, Ml, d), taken0.reshape(nd, Ml),
+               y_raw, n, best_y, xi)
+    return picks[0]

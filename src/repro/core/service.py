@@ -255,18 +255,26 @@ def _failed(e: BaseException) -> _Scored:
     return float("nan"), False, None, "failed", repr(e), e
 
 
-def _score_one(backend, cfg: Config) -> _Scored:
+def _score_one(backend, cfg: Config,
+               request: Optional[EvalRequest] = None) -> _Scored:
     try:
         detailed = getattr(backend, "evaluate_batch_detailed", None)
         if detailed is not None:
             (v,), (bd,) = detailed([cfg])
             return float(v), bool(bd.feasible), bd, "ok", "", None
+        if request is not None and getattr(backend, "wants_request", False):
+            # request-aware backends (e.g. kernels.autotune.KernelEvaluator)
+            # see the fidelity/tag/seed of the measurement they run
+            return float(backend(cfg, request=request)), True, None, \
+                "ok", "", None
         return float(backend(cfg)), True, None, "ok", "", None
     except Exception as e:                  # a failed benchmark, not a crash
         return _failed(e)
 
 
-def _score_batch(backend, cfgs: Sequence[Config]) -> List[_Scored]:
+def _score_batch(backend, cfgs: Sequence[Config],
+                 requests: Optional[Sequence[EvalRequest]] = None,
+                 ) -> List[_Scored]:
     """Batched scoring with per-config failure isolation: the backend's
     batch path is tried first (bit-compatible with the legacy evaluator
     noise stream); if it raises — or returns the wrong number of values,
@@ -290,7 +298,9 @@ def _score_batch(backend, cfgs: Sequence[Config]) -> List[_Scored]:
                     return out
     except Exception:
         pass                                # isolate the failure per config
-    return [_score_one(backend, c) for c in cfgs]
+    if requests is None:
+        requests = [None] * len(cfgs)
+    return [_score_one(backend, c, r) for c, r in zip(cfgs, requests)]
 
 
 def _result(ticket: EvalTicket, scored: _Scored, wall_s: float) -> EvalResult:
@@ -361,7 +371,8 @@ class ImmediateEvaluationService(_BackendService):
             except KeyError as e:
                 scored = [_failed(e)] * len(cfgs)
             else:
-                scored = _score_batch(backend, cfgs)
+                scored = _score_batch(backend, cfgs,
+                                      [t.request for t in group])
             wall = (time.monotonic() - t0) / max(len(cfgs), 1)
             for t, s in zip(group, scored):
                 self._complete(_result(t, s, wall))
@@ -413,7 +424,8 @@ class WorkerPoolEvaluationService(_BackendService):
         t0 = time.monotonic()
         try:
             backend = self._backend(ticket.request.fidelity)
-            scored = _score_one(backend, ticket.request.config)
+            scored = _score_one(backend, ticket.request.config,
+                                ticket.request)
         except Exception as e:              # _backend KeyError and the like
             scored = _failed(e)
         self._complete(_result(ticket, scored, time.monotonic() - t0))

@@ -78,7 +78,26 @@ class Knob:
         if self.kind == "bool":
             return bool(v)
         if self.kind == "categorical":
-            return v if v in self.choices else self.default
+            if v in self.choices:
+                # canonical choice object (256.0 == 256 passes the `in`,
+                # but the stored int is what configs should carry)
+                return self.choices[self.choices.index(v)]
+            # numeric choice sets (tiling ladders like 64/128/256) snap to
+            # the nearest choice — constraint projection (ProductLeq's
+            # halving) hands clip off-ladder values and a default-bounce
+            # would teleport instead of shrink.  Ties go to the smaller
+            # choice (projection shrinks).  Non-numeric sets keep the
+            # default fallback.
+            numeric = all(isinstance(c, (int, float, np.integer, np.floating))
+                          and not isinstance(c, (bool, np.bool_))
+                          for c in self.choices)
+            if numeric and isinstance(v, (int, float, np.integer,
+                                          np.floating)) \
+                    and not isinstance(v, (bool, np.bool_)):
+                return min(self.choices,
+                           key=lambda c: (abs(float(c) - float(v)),
+                                          float(c)))
+            return self.default
         raise AssertionError
 
     def validate(self, v: Value) -> bool:
@@ -500,7 +519,8 @@ class Space:
                 elif k.kind == "bool":
                     cols.append([bool(x) for x in vals])
                 else:
-                    cols.append([x if x in k.choices else k.default
+                    # same nearest-snap semantics as Knob.clip
+                    cols.append([x if x in k.choices else k.clip(x)
                                  for x in vals])
             names = self.names
             outs = [dict(zip(names, row)) for row in zip(*cols)]
@@ -537,3 +557,24 @@ class Space:
         for n in names:
             sp = sp.with_knob(sp.knob(n).expanded(factor))
         return sp
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def pow2_knob(name: str, default: int, lo: int, hi: int, **kw) -> Knob:
+    """A categorical knob over the power-of-two ladder [lo, hi] — the
+    natural shape of kernel tiling parameters (block sizes, chunk widths,
+    warp counts).  The numeric choice set means :meth:`Knob.clip` snaps
+    off-ladder values (e.g. a halved ProductLeq projection) to the
+    nearest rung instead of bouncing to the default."""
+    assert lo > 0 and lo & (lo - 1) == 0, f"{name}: lo not a power of two"
+    assert hi >= lo and hi & (hi - 1) == 0, f"{name}: hi not a power of two"
+    choices = []
+    v = lo
+    while v <= hi:
+        choices.append(v)
+        v *= 2
+    assert default in choices, f"{name}: default {default} off the ladder"
+    return Knob(name, "categorical", default, choices=tuple(choices), **kw)

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
-                    Tuple, runtime_checkable)
+                    Tuple, Union, runtime_checkable)
 
 import numpy as np
 
@@ -125,6 +125,18 @@ class BOConfig:
                                     # of the trace: ask() never blocks on
                                     # the Adam loop, selection runs against
                                     # the last *completed* posterior
+    shard_candidates: Union[bool, int] = False
+                                    # score the candidate pool sharded over
+                                    # host devices (gp.select_batch_sharded;
+                                    # True: all devices, int: that many).
+                                    # Picks are bit-identical to the
+                                    # single-device path at equal pool; on
+                                    # a 1-device host this falls back to
+                                    # plain select_batch
+    refit_device: Optional[int] = None
+                                    # pin the refit_async background fit to
+                                    # jax.devices()[i] (None: the spare
+                                    # device when >1 exists, else share)
     seed: int = 0
 
 
@@ -314,8 +326,18 @@ class BOStrategy(_StrategyBase):
     waves at evaluation speed regardless of ``fit_steps``.  Candidates
     are drawn in the *current* space while the posterior may predate a
     boundary expansion — the same approximation the constant liar already
-    makes, traded for never idling the cluster.  :meth:`close` joins the
-    executor (the strategy stays usable afterwards).
+    makes, traded for never idling the cluster.  When a round's own
+    expansion fires, the snapshot handed to the background fit is
+    re-encoded in the enlarged space first (the trace's unit-cube
+    coordinates just moved).  On a multi-device host the background fit
+    is pinned to the spare device (``cfg.refit_device`` overrides), so
+    its Adam dispatches never contend with selection.  :meth:`close`
+    joins the executor (the strategy stays usable afterwards).
+
+    ``cfg.shard_candidates`` scores the candidate pool sharded over the
+    host's devices (:func:`repro.core.gp.select_batch_sharded`) — picks
+    stay bit-identical to the single-device path at equal pool, so the
+    gate only changes wall-clock, never the trace.
     """
 
     def __init__(self, space: Space, cfg: Optional[BOConfig] = None,
@@ -337,6 +359,8 @@ class BOStrategy(_StrategyBase):
         self._refit_snapshot = None          # (x, y) the in-flight fit sees
         self._refit_len = 0                  # trace length it was given
         self._refit_pool = None
+        self._space_version = 0              # bumped by boundary expansion
+        self._refit_space_version = 0        # space the last fit was given
 
     @property
     def finished(self) -> bool:
@@ -378,29 +402,62 @@ class BOStrategy(_StrategyBase):
             self._params = state.params
             self._posterior = (state, x, y)
             self._refit_len = len(self.trace.values)
+            self._refit_space_version = self._space_version
         return self._posterior
+
+    def _refit_device(self):
+        """Device the background fit is pinned to: ``cfg.refit_device``
+        when set, else the spare device (off the driver's dispatch queue)
+        when the host has more than one, else ``None`` (share the single
+        device; the fit still only thread-yields, never blocks ask)."""
+        import jax
+        if self.cfg.refit_device is not None:
+            devs = jax.devices()
+            return devs[self.cfg.refit_device % len(devs)]
+        from repro.parallel.sharding import spare_device
+        return spare_device()
+
+    def _fit_background(self, x: np.ndarray, y: np.ndarray, steps: int,
+                        warm):
+        """The executor task: a pure gp.fit, pinned via
+        ``jax.default_device`` to the spare device so the Adam loop's
+        dispatches never queue in front of the driver's selection work,
+        with the finished posterior handed back to the driver's device."""
+        cfg = self.cfg
+        dev = self._refit_device()
+        if dev is None:
+            return gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
+                          pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+        import jax
+        with jax.default_device(dev):
+            state = gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
+                           pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+        home = jax.devices()[0]
+        return jax.tree.map(lambda a: jax.device_put(a, home), state)
 
     def _refit_kick(self, x: np.ndarray, y: np.ndarray):
         """Kick a background refit on the (x, y) snapshot when fresh
-        observations arrived.  Called at the END of ask — after the
-        selection's device work has completed — so on a single shared
-        accelerator the refit's computation queues behind this round's
-        selection, never in front of the next one the driver is about to
-        dispatch."""
-        if (self._refit_future is not None
-                or len(self.trace.values) <= self._refit_len):
+        observations arrived — or when boundary expansion re-encoded the
+        trace (same observation count, different inputs).  Called at the
+        END of ask — after the selection's device work has completed — so
+        on a single shared accelerator the refit's computation queues
+        behind this round's selection, never in front of the next one the
+        driver is about to dispatch."""
+        if self._refit_future is not None:
+            return
+        if (len(self.trace.values) <= self._refit_len
+                and self._refit_space_version == self._space_version):
             return
         warm, steps = self._fit_args()
-        cfg = self.cfg
         self._refit_len = len(self.trace.values)
+        self._refit_space_version = self._space_version
         self._refit_snapshot = (x, y)
         if self._refit_pool is None:
             from concurrent.futures import ThreadPoolExecutor
             self._refit_pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="gp-refit")
         self._refit_future = self._refit_pool.submit(
-            gp.fit, x, y, cfg.kernel, steps=steps, params=warm,
-            pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+            self._fit_background, x, y, steps, warm)
 
     def close(self):
         """Join the background refit executor (refit_async mode).  An
@@ -432,10 +489,23 @@ class BOStrategy(_StrategyBase):
             if cfg.boundary_damping and len(near) > 1:
                 factor = factor ** (1.0 / len(near))
             self.space = self.space.expand_boundaries(near, factor)
+            self._space_version += 1
             at = self._evals_done + len(self._pending)
             for name in near:
                 self.trace.boundary_events.append((at, name))
         return near
+
+    # -- sharded candidate scoring --------------------------------------------
+
+    def _shard_devices(self):
+        """Devices for sharded candidate scoring, or ``None`` for the
+        single-device path (gate off, or nothing to shard over)."""
+        sc = self.cfg.shard_candidates
+        if not sc:
+            return None
+        from repro.parallel.sharding import pool_devices
+        devs = pool_devices(None if sc is True else int(sc))
+        return devs if len(devs) > 1 else None
 
     def ask(self, n: Optional[int] = None) -> List[Config]:
         # -- initial design ---------------------------------------------------
@@ -506,18 +576,34 @@ class BOStrategy(_StrategyBase):
         y_raw = np.zeros(int(state.x.shape[0]), np.float32)
         y_raw[:n_fit] = np.asarray(y_fit, np.float32)
         q_sel = cfg.batch_size * -(-q // cfg.batch_size)
-        idx = np.asarray(gp.select_batch(
-            state, cand.astype(np.float32), y_raw, n_fit, best_y, q_sel,
-            kind=cfg.kernel, fantasy=cfg.fantasy,
-            acquisition=cfg.acquisition, use_pallas=cfg.use_pallas))
+        devs = self._shard_devices()
+        if devs is not None:
+            # candidate pool sharded row-wise over the mesh; picks are
+            # bit-identical to select_batch at equal pool, so the gate
+            # never changes a trace — only its wall-clock
+            idx = np.asarray(gp.select_batch_sharded(
+                state, cand.astype(np.float32), y_raw, n_fit, best_y,
+                q_sel, kind=cfg.kernel, fantasy=cfg.fantasy,
+                acquisition=cfg.acquisition, use_pallas=cfg.use_pallas,
+                devices=devs))
+        else:
+            idx = np.asarray(gp.select_batch(
+                state, cand.astype(np.float32), y_raw, n_fit, best_y, q_sel,
+                kind=cfg.kernel, fantasy=cfg.fantasy,
+                acquisition=cfg.acquisition, use_pallas=cfg.use_pallas))
         picks = [cand[int(i)] for i in idx[:q]]
         probes = self.space.decode_batch(np.stack(picks))
+        expanded = self._expand_near(probes)
         if cfg.refit_async:
             # selection has device-synced (np.asarray above): the refit's
-            # computation queues strictly after it
+            # computation queues strictly after it.  Expansion runs FIRST:
+            # when this round enlarged a boundary the trace encoding just
+            # changed, so the snapshot is re-encoded in the new space —
+            # otherwise the background fit would train on stale unit-cube
+            # coordinates for the rest of the run
+            if expanded:
+                x = self.space.encode_batch(self.trace.configs)
             self._refit_kick(x, y)
-
-        self._expand_near(probes)
         for c in probes:
             self._pending.add(c)
         return probes

@@ -1,3 +1,46 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom compute kernels (Pallas) + the autotune dogfood loop.
+
+Each subpackage ships ``kernel.py`` (the Pallas body), ``ops.py`` (the
+jit'd model-layout wrapper) and ``ref.py`` (the jnp oracle).  Tiling
+parameters (block sizes, chunk widths) are exposed as keyword knobs on
+the ops wrappers; :mod:`repro.kernels.autotune` turns each wrapper's
+``autotune_space()``/``autotune_bench()`` pair into a Sapphire search
+problem, so the tuner tunes its own kernels (ROADMAP's dogfood item).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+def tuning_compiler_params(num_warps: Optional[int] = None,
+                           pipeline: Optional[int] = None,
+                           interpret: bool = False):
+    """``pallas_call`` compiler params for the tunable scheduling knobs.
+
+    ``num_warps``/``pipeline`` (pipeline depth → Triton ``num_stages``)
+    only exist on the GPU lowering; on TPU the Mosaic pipeline is derived
+    from the BlockSpecs and in interpret mode there is no compiler at
+    all — those paths get ``None`` (pass nothing), so the knobs are
+    *inert* off-GPU and the autotune space stays portable."""
+    import jax
+    if interpret or jax.default_backend() != "gpu":
+        return None
+    params = {}
+    if num_warps:
+        params["num_warps"] = int(num_warps)
+    if pipeline:
+        params["num_stages"] = int(pipeline)
+    return {"triton": params} if params else None
+
+
+_AUTOTUNE_EXPORTS = ("KernelEvaluator", "kernel_bench", "kernel_space",
+                     "tunable_kernels", "tune_kernel")
+
+
+def __getattr__(name):
+    # lazy: autotune imports the ops modules, which import this package
+    if name in _AUTOTUNE_EXPORTS:
+        from repro.kernels import autotune
+        return getattr(autotune, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

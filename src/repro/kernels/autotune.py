@@ -1,0 +1,189 @@
+"""Kernel autotune: SAPPHIRE tuning its own Pallas kernels (the dogfood).
+
+The tuner's premise — simulation-based search beats hand-picked defaults
+when evaluation throughput scales — applies to its *own* compute: the
+three shipped kernels run with hand-picked block sizes.  This module
+closes the loop:
+
+* :class:`KernelSpace` — a kernel's tunable tiling/scheduling space
+  (``block_q``/``block_k``/``block_n``/``block_m``/``chunk``/
+  ``num_warps``/``pipeline``), built from each ops module's
+  ``autotune_space()`` with real validity constraints (``ProductLeq``
+  tile budgets, power-of-two ladders that snap under projection);
+* :class:`KernelEvaluator` — an ``EvaluationService`` backend
+  (``service_kind="pool"``) that times a kernel config on-device with
+  warmup + ``block_until_ready`` best-of-repeats.  A config that fails
+  validation or fails to compile raises, which the service layer turns
+  into a *failed* EvalResult — the async controller prices it as
+  infeasible instead of killing the run;
+* :func:`tune_kernel` — the whole loop: BO over the kernel space through
+  ``Controller.run_async``, seeded with the hand-picked default so the
+  result can always be compared head-to-head against it.
+
+This is a real non-analytic workload for the experiment loop: seconds of
+wall-clock per evaluation, failures, and a measurable win over defaults
+(asserted in ``benchmarks/perf_multi_device.py``).
+"""
+
+from __future__ import annotations
+
+import importlib
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.space import Config, Space
+
+SCREEN_FIDELITY = "screen"
+
+
+@dataclass(frozen=True)
+class KernelSpace:
+    """A tunable kernel: its name, knob :class:`Space` (with validity
+    constraints) and benchmark factory ``bench(**shape) -> build`` where
+    ``build(cfg) -> run`` closes over the input tensors and ``run()``
+    executes one kernel call."""
+    kernel: str
+    space: Space
+    bench: Callable[..., Callable[[Config], Callable[[], Any]]]
+
+    def default_config(self) -> Config:
+        return self.space.project(self.space.default_config())
+
+
+_OPS = {
+    "gp_gram": "repro.kernels.gp_gram.ops",
+    "flash_attention": "repro.kernels.flash_attention.ops",
+    "mlstm_chunk": "repro.kernels.mlstm_chunk.ops",
+}
+_REGISTRY: Dict[str, KernelSpace] = {}
+
+
+def tunable_kernels() -> tuple:
+    return tuple(sorted(_OPS))
+
+
+def kernel_spec(kernel: str) -> KernelSpace:
+    spec = _REGISTRY.get(kernel)
+    if spec is None:
+        try:
+            mod = importlib.import_module(_OPS[kernel])
+        except KeyError:
+            raise KeyError(f"unknown kernel {kernel!r}; "
+                           f"tunable: {tunable_kernels()}") from None
+        spec = KernelSpace(kernel, mod.autotune_space(), mod.autotune_bench)
+        _REGISTRY[kernel] = spec
+    return spec
+
+
+def kernel_space(kernel: str) -> Space:
+    """The tunable knob space of ``kernel`` (validity constraints
+    included)."""
+    return kernel_spec(kernel).space
+
+
+def kernel_bench(kernel: str, **shape):
+    """``build(cfg) -> run()`` benchmark factory for ``kernel`` at
+    ``shape`` (kernel-specific keywords, e.g. ``n=136`` for gp_gram)."""
+    return kernel_spec(kernel).bench(**shape)
+
+
+@dataclass
+class KernelEvaluator:
+    """On-device kernel timer behind the EvaluationService contract.
+
+    ``service_kind = "pool"`` routes it through a worker pool at the
+    Controller boundary (``as_service``); ``max_workers = 1`` keeps
+    timing runs serialized — overlapped measurements would contend for
+    the device and time each other's noise.  ``wants_request = True``
+    lets the service hand the :class:`EvalRequest` through, so a
+    ``fidelity="screen"`` request is timed with fewer repeats (the
+    successive-halving screen tier).
+
+    A config off the space (validation failure) or one the kernel
+    rejects/fails to compile raises — the service layer converts that
+    into a failed EvalResult, which ``run_async`` records as infeasible
+    and prices past the worst observed value.
+    """
+    kernel: str = "gp_gram"
+    shape: Optional[Dict[str, Any]] = None
+    repeats: int = 5
+    warmup: int = 2
+    screen_repeats: int = 2
+    max_workers: int = 1                 # read by as_service
+    service_kind = "pool"                # read by as_service
+    wants_request = True                 # read by _score_one
+    spec: KernelSpace = field(init=False)
+    space: Space = field(init=False)
+
+    def __post_init__(self):
+        self.spec = kernel_spec(self.kernel)
+        self.space = self.spec.space
+        self._build = self.spec.bench(**(self.shape or {}))
+
+    def __call__(self, cfg: Config, request=None) -> float:
+        errs = self.space.validate(cfg)
+        if errs:
+            raise ValueError(f"{self.kernel}: invalid config {cfg!r}: "
+                             + "; ".join(errs))
+        import jax
+        run = self._build(cfg)           # a bad tiling raises here or on
+        for _ in range(max(self.warmup, 1)):     # first (compiling) call
+            jax.block_until_ready(run())
+        reps = self.repeats
+        if request is not None and request.fidelity == SCREEN_FIDELITY:
+            reps = self.screen_repeats
+        best = math.inf
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run())
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3                # milliseconds (minimized)
+
+
+def tune_kernel(kernel: str = "gp_gram", shape: Optional[Dict] = None,
+                budget: int = 20, batch_size: int = 2, seed: int = 0,
+                repeats: int = 5, warmup: int = 2, fit_steps: int = 60,
+                max_in_flight: Optional[int] = None,
+                db_path: Optional[str] = None) -> Dict[str, Any]:
+    """Tune ``kernel``'s tiling with BO through the async experiment loop.
+
+    The initial design is seeded with the hand-picked default config
+    (``init_design`` puts caller configs first), so every run measures
+    the baseline it is trying to beat under identical conditions — the
+    returned ``default_value`` is that measurement, not a separate run.
+
+    Returns ``{"best_config", "best_value", "default_config",
+    "default_value", "trace", "db"}`` (values in ms).
+    """
+    from repro.core.controller import Controller, EvalDB
+    from repro.core.strategy import BOConfig, BOStrategy
+
+    ev = KernelEvaluator(kernel, shape=shape, repeats=repeats, warmup=warmup)
+    space = ev.space
+    default = space.project(space.default_config())
+    n_init = min(max(budget // 3, 4), budget)
+    cfg = BOConfig(n_init=n_init, n_iter=max(budget - n_init, 0),
+                   batch_size=batch_size, n_candidates=256, n_local=64,
+                   fit_steps=fit_steps, warm_start=True,
+                   dynamic_boundary=False, seed=seed)
+    strat = BOStrategy(space, cfg, init_configs=[default])
+    ctl = Controller(ev, EvalDB(db_path), tag="autotune",
+                     workload=f"kernel:{kernel}")
+    try:
+        trace = ctl.run_async(strat, max_in_flight=max_in_flight)
+    finally:
+        ctl.service.close()
+    best_cfg, best_val = strat.best()
+
+    from repro.core.strategy import _config_key
+    dkey = _config_key(default)
+    default_value = None
+    for c, v in zip(trace.configs, trace.values):
+        if _config_key(c) == dkey:
+            default_value = float(v)
+            break
+    return {"best_config": dict(best_cfg), "best_value": float(best_val),
+            "default_config": dict(default), "default_value": default_value,
+            "trace": trace, "db": ctl.db}

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tuning_compiler_params
+
 NEG_INF = -1e30
 LANES = 128          # TPU lane width: scratch running stats use a full lane
 
@@ -102,6 +104,8 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,
                         block_q: int = 512, block_k: int = 512,
+                        num_warps: Optional[int] = None,
+                        pipeline: Optional[int] = None,
                         sq_valid: Optional[int] = None,
                         sk_valid: Optional[int] = None,
                         interpret: bool = False):
@@ -131,6 +135,10 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
     # so the map is simply b // rep_total.
     kv_map = lambda b, i, j: (b // rep_total, j, 0)       # noqa: E731
 
+    extra = {}
+    cp = tuning_compiler_params(num_warps, pipeline, interpret)
+    if cp is not None:
+        extra["compiler_params"] = cp
     return pl.pallas_call(
         kernel,
         grid=(BH, n_qb, n_kb),
@@ -147,4 +155,5 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
             pltpu.VMEM((block_q, LANES), jnp.float32),  # running sum l
         ],
         interpret=interpret,
+        **extra,
     )(q, k, v)

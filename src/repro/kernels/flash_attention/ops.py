@@ -28,13 +28,20 @@ def _pad_to(x, target: int, axis: int):
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "softcap", "block_q", "block_k",
-                     "interpret"))
+                     "num_warps", "pipeline", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     block_q: int = 512, block_k: int = 512,
+                    num_warps: Optional[int] = None,
+                    pipeline: Optional[int] = None,
                     interpret: Optional[bool] = None):
-    """q [B,Sq,H,D], k/v [B,Sk,Kh,D] -> [B,Sq,H,D] (q.dtype)."""
+    """q [B,Sq,H,D], k/v [B,Sk,Kh,D] -> [B,Sq,H,D] (q.dtype).
+
+    ``block_q``/``block_k``/``num_warps``/``pipeline`` are SAPPHIRE
+    autotune knobs (:func:`autotune_space`); the output is
+    tiling-invariant (tests/test_kernels.py guards this).
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, Sq, H, D = q.shape
@@ -51,6 +58,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
     o = flash_attention_fwd(qf, kf, vf, causal=causal, window=window,
                             softcap=softcap, block_q=bq, block_k=bk,
+                            num_warps=num_warps, pipeline=pipeline,
                             sq_valid=Sq, sk_valid=Sk, interpret=interpret)
     o = o.reshape(B, H, sq_pad, D).transpose(0, 2, 1, 3)
     return o[:, :Sq]
@@ -58,3 +66,46 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# autotune hooks (repro.kernels.autotune)
+# ---------------------------------------------------------------------------
+
+def autotune_space():
+    """Tunable tiling/scheduling space of the flash forward."""
+    from repro.core.space import Knob, ProductLeq, Space, pow2_knob
+    return Space(
+        knobs=(
+            pow2_knob("block_q", 512, 16, 1024,
+                      description="query tile rows"),
+            pow2_knob("block_k", 512, 16, 1024,
+                      description="kv tile rows"),
+            pow2_knob("num_warps", 4, 1, 8, inert=True,
+                      description="GPU warps per block (inert off-GPU)"),
+            Knob("pipeline", "int", 2, lo=1, hi=4, inert=True,
+                 description="GPU pipeline stages (inert off-GPU)"),
+        ),
+        # the [bq, bk] score tile's VMEM budget
+        constraints=(ProductLeq(("block_q", "block_k"), limit=512 * 512),),
+    )
+
+
+def autotune_bench(B: int = 1, S: int = 192, H: int = 4, Kh: int = 2,
+                   D: int = 64, causal: bool = True, seed: int = 0):
+    """``build(cfg) -> run()`` factory for :class:`KernelEvaluator`."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Kh, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Kh, D), jnp.float32)
+
+    def build(cfg):
+        bq, bk = int(cfg["block_q"]), int(cfg["block_k"])
+        nw = int(cfg.get("num_warps", 0)) or None
+        ps = int(cfg.get("pipeline", 0)) or None
+
+        def run():
+            return flash_attention(q, k, v, causal=causal, block_q=bq,
+                                   block_k=bk, num_warps=nw, pipeline=ps)
+        return run
+    return build

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tuning_compiler_params
+
 SQRT5 = math.sqrt(5.0)
 
 
@@ -42,15 +44,22 @@ def _kernel(xa_ref, xb_ref, o_ref, *, signal_var: float):
 
 def matern52_gram_fwd(xa, xb, *, signal_var: float = 1.0,
                       block_n: int = 128, block_m: int = 128,
+                      num_warps=None, pipeline=None,
                       interpret: bool = False):
     """xa [n, d], xb [m, d] — already scaled by 1/lengthscale.
 
     n % block_n == 0 and m % block_m == 0 (wrapper pads).
+    ``num_warps``/``pipeline`` are the GPU scheduling knobs (inert on
+    TPU/interpret — see :func:`repro.kernels.tuning_compiler_params`).
     """
     n, d = xa.shape
     m, _ = xb.shape
     assert n % block_n == 0 and m % block_m == 0
     kernel = functools.partial(_kernel, signal_var=signal_var)
+    extra = {}
+    cp = tuning_compiler_params(num_warps, pipeline, interpret)
+    if cp is not None:
+        extra["compiler_params"] = cp
     return pl.pallas_call(
         kernel,
         grid=(n // block_n, m // block_m),
@@ -61,4 +70,5 @@ def matern52_gram_fwd(xa, xb, *, signal_var: float = 1.0,
         out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
         interpret=interpret,
+        **extra,
     )(xa, xb)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tuning_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -86,10 +88,13 @@ def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
 
 
 def mlstm_chunk_fwd(q, k, v, logi, logf, *, chunk: int = 256,
+                    num_warps=None, pipeline=None,
                     interpret: bool = False):
     """q/k/v [BH, S, P]; logi/logf [BH, S] (f32); S % chunk == 0.
 
     k must already carry the 1/sqrt(P) scale.  Returns h [BH, S, P] (q.dtype).
+    ``num_warps``/``pipeline`` are the GPU scheduling knobs (inert on
+    TPU/interpret).
     """
     BH, S, P = q.shape
     assert S % chunk == 0, "chunk must divide sequence length"
@@ -98,6 +103,10 @@ def mlstm_chunk_fwd(q, k, v, logi, logf, *, chunk: int = 256,
     kernel = functools.partial(_kernel, chunk=chunk, p_dim=P)
     seq_spec = pl.BlockSpec((1, chunk, P), lambda b, t: (b, t, 0))
     gate_spec = pl.BlockSpec((1, chunk), lambda b, t: (b, t))
+    extra = {}
+    cp = tuning_compiler_params(num_warps, pipeline, interpret)
+    if cp is not None:
+        extra["compiler_params"] = cp
     return pl.pallas_call(
         kernel,
         grid=(BH, n_chunks),
@@ -110,4 +119,5 @@ def mlstm_chunk_fwd(q, k, v, logi, logf, *, chunk: int = 256,
             pltpu.VMEM((8, 128), jnp.float32),    # stabilizer m (scalar)
         ],
         interpret=interpret,
+        **extra,
     )(q, k, v, logi, logf)

@@ -12,6 +12,13 @@ sub-knobs take effect (DESIGN.md §5).
 Mesh axes (launch/mesh.py):
   single-pod : ("data", "model")                       16 × 16 = 256 chips
   multi-pod  : ("pod", "data", "model")            2 × 16 × 16 = 512 chips
+
+Besides the model-zoo layouts this module also owns the *proposer-side*
+mesh: the tuner itself runs on an accelerator host, and its candidate
+pool shards over a 1-D ``("pool",)`` mesh (:func:`pool_mesh`) — each
+device scores a shard of the acquisition pool against a replicated GP
+posterior (``gp.select_batch_sharded``).  :func:`spare_device` picks the
+device background work (the marginal-likelihood refit) is pinned to.
 """
 
 from __future__ import annotations
@@ -19,10 +26,48 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
+
+POOL_AXIS = "pool"
+
+
+def pool_devices(n: Optional[int] = None) -> Tuple:
+    """The devices the proposer's candidate pool shards over: the first
+    ``n`` host devices (all of them when ``n`` is None or exceeds the
+    host).  Deterministic order — shard k owns pool rows
+    ``[k·M/nd, (k+1)·M/nd)``, so the device tuple is part of the
+    pick-reproducibility contract."""
+    devs = jax.devices()
+    if n is not None:
+        devs = devs[:max(int(n), 1)]
+    return tuple(devs)
+
+
+def pool_mesh(n: Optional[int] = None,
+              devices: Optional[Sequence] = None) -> Mesh:
+    """1-D ``("pool",)`` mesh over host devices for proposer fan-out
+    (candidate scoring, kernel-autotune sweeps)."""
+    devs = tuple(devices) if devices is not None else pool_devices(n)
+    return Mesh(np.array(devs), (POOL_AXIS,))
+
+
+def spare_device(avoid_index: int = 0):
+    """A device for background work (the GP refit executor): the *last*
+    host device when more than one exists — off the driver's dispatch
+    queue, which stays on device ``avoid_index`` — else ``None`` (single
+    device: background work shares the queue and only thread-yields)."""
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    for d in reversed(devs):
+        if devs.index(d) != avoid_index:
+            return d
+    return None
 
 
 @dataclass(frozen=True)

@@ -144,3 +144,111 @@ def test_gp_gram_psd():
     g = matern52_gram(x, jnp.full((6,), 0.3), 1.0)
     chol = np.linalg.cholesky(np.asarray(g) + 1e-5 * np.eye(64))
     assert np.all(np.isfinite(chol))
+
+
+# ---------------------------------------------------------------------------
+# autotune knobs: rectangular tiles, knob spaces, the dogfood evaluator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_n,block_m", [(64, 256), (256, 64), (32, 32)])
+def test_gp_gram_rectangular_tiles_match_reference(block_n, block_m):
+    """Tiling is a pure scheduling knob: non-square tiles at shapes off
+    every block ladder (n=136, m=77) reproduce the reference bit-for-bit
+    within f32 tolerance."""
+    ka, kb, kl = jax.random.split(jax.random.key(9), 3)
+    xa = jax.random.uniform(ka, (136, 9))
+    xb = jax.random.uniform(kb, (77, 9))
+    ls = jax.random.uniform(kl, (9,), minval=0.1, maxval=1.0)
+    np.testing.assert_allclose(
+        np.asarray(matern52_gram(xa, ls, 1.3, block=block_n,
+                                 block_m=block_m)),
+        np.asarray(matern52_gram_ref(xa, ls, 1.3)), atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(matern52_cross(xa, xb, ls, 0.8, block=block_n,
+                                  block_m=block_m)),
+        np.asarray(matern52_cross_ref(xa, xb, ls, 0.8)), atol=2e-4)
+
+
+class TestKernelSpaces:
+    def test_tunable_registry(self):
+        from repro.kernels.autotune import kernel_space, tunable_kernels
+        assert tunable_kernels() == ("flash_attention", "gp_gram",
+                                     "mlstm_chunk")
+        for k in tunable_kernels():
+            sp = kernel_space(k)
+            dflt = sp.project(sp.default_config())
+            assert sp.validate(dflt) == []
+        with pytest.raises(KeyError):
+            kernel_space("nope")
+
+    def test_pow2_snap_and_product_constraint(self):
+        """Projection first snaps every knob to its pow2 ladder, then the
+        ProductLeq halves the larger factor until the tile budget holds —
+        and returns the ladder's own int objects, not floats."""
+        from repro.kernels.autotune import kernel_space
+        sp = kernel_space("gp_gram")
+        p = sp.project({"block_n": 500, "block_m": 500,
+                        "num_warps": 3, "pipeline": 2})
+        assert p["block_n"] * p["block_m"] <= 256 * 256
+        assert all(isinstance(p[k], int) and not isinstance(p[k], bool)
+                   for k in ("block_n", "block_m", "num_warps"))
+        assert p["num_warps"] in (2, 4)          # nearest pow2 of 3
+        assert sp.validate(p) == []
+
+    def test_pow2_knob_helper(self):
+        from repro.core.space import pow2_knob
+        k = pow2_knob("b", 128, 16, 512)
+        assert k.choices == (16, 32, 64, 128, 256, 512)
+        assert k.clip(200) == 256
+        assert k.clip(24) in (16, 32)            # nearest, tie -> smaller
+        with pytest.raises(AssertionError):
+            pow2_knob("b", 100, 16, 512)         # default off the ladder
+
+
+class TestKernelEvaluator:
+    def test_times_valid_config(self):
+        from repro.kernels.autotune import KernelEvaluator
+        ev = KernelEvaluator("gp_gram", shape={"n": 24, "d": 3},
+                            repeats=1, warmup=1)
+        ms = ev(ev.spec.default_config())
+        assert ms > 0.0
+
+    def test_invalid_config_fails_through_service(self):
+        """A config off the space raises in the evaluator; the service
+        layer converts it into a *failed* EvalResult — the contract that
+        lets the async controller price it as infeasible instead of
+        dying."""
+        from repro.core.service import EvalRequest, as_service
+        from repro.kernels.autotune import KernelEvaluator
+        ev = KernelEvaluator("gp_gram", shape={"n": 24, "d": 3},
+                            repeats=1, warmup=1)
+        bad = dict(ev.spec.default_config())
+        bad["block_n"] = 48                      # off the pow2 ladder
+        with as_service(ev) as svc:
+            ticket = svc.submit([EvalRequest(config=bad)])[0]
+            res = svc.gather([ticket])[0]
+        assert not res.ok
+        assert "invalid config" in res.error
+
+    def test_screen_fidelity_reduces_repeats(self):
+        from repro.core.service import EvalRequest
+        from repro.kernels.autotune import KernelEvaluator
+        calls = []
+        ev = KernelEvaluator("gp_gram", shape={"n": 24, "d": 3},
+                            repeats=4, warmup=1, screen_repeats=1)
+        build = ev._build
+
+        def counting_build(cfg):
+            run = build(cfg)
+            def wrapped():
+                calls.append(1)
+                return run()
+            return wrapped
+
+        ev._build = counting_build
+        cfg = ev.spec.default_config()
+        ev(cfg, request=EvalRequest(config=cfg, fidelity="screen"))
+        screen_calls = len(calls)
+        calls.clear()
+        ev(cfg, request=EvalRequest(config=cfg))
+        assert screen_calls < len(calls)

@@ -422,6 +422,62 @@ class TestRunAsync:
         assert all(r.fidelity == "test" for r in db.records)
 
 
+# ---------------------------------------------------------------------------
+# default in-flight cap: bounded staleness out of the box (PR 6)
+# ---------------------------------------------------------------------------
+
+class TestInFlightAutoCap:
+    """``max_in_flight=None`` caps pending work at 4x the strategy's
+    batch width instead of letting a slow service absorb the whole
+    remaining budget against one stale posterior; ``max_in_flight <= 0``
+    restores the old unbounded behavior; and the automatic cap only
+    *gates* asks — it never shapes their width — so immediate-service
+    traces are byte-identical with the gate on or off."""
+
+    def _peak_concurrency(self, max_in_flight):
+        state = {"cur": 0, "peak": 0}
+        lock = threading.Lock()
+
+        def slow(c):
+            with lock:
+                state["cur"] += 1
+                state["peak"] = max(state["peak"], state["cur"])
+            time.sleep(0.05)
+            with lock:
+                state["cur"] -= 1
+            return _f(c)
+
+        strat = RandomStrategy(_space(), 48, seed=3, batch_size=4)
+        with WorkerPoolEvaluationService(slow, max_workers=48) as svc:
+            Controller(svc, EvalDB()).run_async(
+                strat, max_in_flight=max_in_flight)
+        assert len(strat.trace.values) == 48
+        return state["peak"]
+
+    def test_default_caps_at_four_batch_widths(self):
+        # batch_size=4 -> auto cap 16: with 48 eager workers the pool
+        # can only ever hold what the driver lets in flight
+        assert self._peak_concurrency(None) <= 16
+
+    def test_zero_restores_unbounded(self):
+        assert self._peak_concurrency(0) > 16
+
+    def test_gate_never_changes_immediate_trace(self):
+        def run(max_in_flight):
+            cfg = BOConfig(n_init=4, n_iter=8, batch_size=2,
+                           n_candidates=32, fit_steps=10, seed=5)
+            strat = BOStrategy(_space(), cfg)
+            svc = ImmediateEvaluationService(_f)
+            Controller(svc, EvalDB()).run_async(
+                strat, max_in_flight=max_in_flight)
+            return strat.trace
+
+        capped = run(None)
+        unbounded = run(0)
+        assert capped.configs == unbounded.configs
+        assert np.allclose(capped.values, unbounded.values)
+
+
 class TestSapphireAsync:
     def test_async_pipeline_reproduces_sync_best(self):
         """Acceptance: the async experiment loop over the immediate

@@ -531,3 +531,80 @@ class TestRefitAsync:
         assert len(trace.values) == 4 + 6
         slow = [s for s in lat if s > delay / 2]
         assert len(slow) <= 1            # only the first-round sync fit
+
+
+# ---------------------------------------------------------------------------
+# refit staleness across boundary expansion: the background fit must see
+# the trace re-encoded in the *current* space, and a space change alone
+# (same observation count) must trigger a fresh refit
+# ---------------------------------------------------------------------------
+
+class TestRefitSpaceStaleness:
+    def _dyn_space(self):
+        return Space((Knob("a", "float", 4.0, lo=1.0, hi=8.0,
+                           dynamic_bound=True),
+                      Knob("b", "float", 4.0, lo=1.0, hi=8.0,
+                           dynamic_bound=True)))
+
+    def _seed(self, strat):
+        init = strat.ask()
+        strat.tell(init, [float(8.0 - c["a"]) for c in init])
+        return init
+
+    def test_space_change_alone_rekicks_refit(self):
+        """Boundary expansion re-encodes every stored config, so a refit
+        over the old unit-cube coordinates is stale even when no new
+        observation arrived.  The version tracker must kick a fresh fit
+        on the re-encoded snapshot."""
+        cfg = BOConfig(n_init=3, n_iter=6, fit_steps=5, n_candidates=16,
+                       refit_async=True, dynamic_boundary=True)
+        strat = BOStrategy(self._dyn_space(), cfg)
+        self._seed(strat)
+        x = strat.space.encode_batch(strat.trace.configs)
+        y = np.asarray(strat.trace.values, float)
+        strat._refit(x, y)                   # sync fit levels both trackers
+        strat._refit_kick(x, y)
+        assert strat._refit_future is None   # nothing new: no kick
+        near = strat._expand_near([{"a": 7.9, "b": 4.0}])
+        assert near == ["a"]
+        x2 = strat.space.encode_batch(strat.trace.configs)
+        assert not np.allclose(x, x2)        # expansion moved the encoding
+        strat._refit_kick(x2, y)
+        assert strat._refit_future is not None   # same obs count, new space
+        strat._refit_future.result()
+        assert np.allclose(strat._refit_snapshot[0], x2)
+        strat.close()
+
+    def test_ask_reencodes_snapshot_after_expansion(self, monkeypatch):
+        """End-to-end through ask(): a round that enlarges a boundary
+        must hand the background fit the trace encoded in the *enlarged*
+        space, not the coordinates selection ran against."""
+        monkeypatch.setattr(Space, "near_boundary",
+                            lambda self, cfg, tol=0.05: ["a"])
+        cfg = BOConfig(n_init=3, n_iter=6, batch_size=2, fit_steps=5,
+                       n_candidates=16, refit_async=True,
+                       dynamic_boundary=True)
+        strat = BOStrategy(self._dyn_space(), cfg)
+        self._seed(strat)
+        hi_before = strat.space.knob("a").hi
+        probes = strat.ask()                 # sync first fit + expansion
+        assert probes
+        assert strat.space.knob("a").hi > hi_before
+        assert strat._refit_future is not None
+        strat._refit_future.result()
+        want = strat.space.encode_batch(strat.trace.configs)
+        assert np.allclose(strat._refit_snapshot[0], want)
+        strat.close()
+
+    def test_refit_device_selection(self):
+        import jax
+
+        from repro.parallel.sharding import spare_device
+
+        devs = jax.devices()
+        pinned = BOStrategy(_space(), BOConfig(refit_device=0))
+        assert pinned._refit_device() == devs[0]
+        wrap = BOStrategy(_space(), BOConfig(refit_device=len(devs)))
+        assert wrap._refit_device() == devs[0]    # modular, never IndexError
+        auto = BOStrategy(_space(), BOConfig())
+        assert auto._refit_device() == spare_device()
