@@ -14,6 +14,7 @@ One module per paper table/figure (DESIGN.md §7):
   perf_async  async vs synchronous experiment loop on a latency-bound service
   perf_gp_ask device-resident q-EI selection + background GP refit
   perf_multi_device  sharded candidate scoring + kernel-autotune dogfood
+  perf_replication  adaptive vs fixed-k replicated measurements budget
 
 ``--json [PATH]`` writes per-benchmark wall-clock timings and statuses to
 an artifacts JSON (default artifacts/bench/run_timings.json) so the perf
@@ -32,7 +33,8 @@ from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig6_ranking, fig7_topk_efficiency,
                         fig8_two_fidelity, perf_async_service,
                         perf_batch_pipeline, perf_gp_ask, perf_multi_device,
-                        roofline_table, sec34_optimizers, table2_top16)
+                        perf_replication, roofline_table, sec34_optimizers,
+                        table2_top16)
 
 MODULES = [
     ("fig2b_response_surface", fig2b_response_surface),
@@ -49,6 +51,7 @@ MODULES = [
     ("perf_async_service", perf_async_service),
     ("perf_gp_ask", perf_gp_ask),
     ("perf_multi_device", perf_multi_device),
+    ("perf_replication", perf_replication),
 ]
 
 

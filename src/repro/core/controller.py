@@ -41,8 +41,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.replication import AdaptiveRacer, ReplicationPolicy, \
+    ReplicatingService
 from repro.core.service import (DEFAULT_FIDELITY, EvalRequest, EvalResult,
-                                EvaluationService, as_service)
+                                EvaluationService, as_service, fold_seed)
 from repro.core.space import Config, Space
 from repro.core.strategy import SearchStrategy, Trace
 
@@ -80,6 +82,9 @@ class EvalRecord:
     workload: str = ""
     fidelity: str = ""
     status: str = "ok"            # "ok" | "failed" (recorded as infeasible)
+    repeats: int = 1              # successful repeats pooled into `value`
+    variance: float = 0.0         # variance of that pooled mean (0.0 =
+                                  # single measurement / no estimate)
 
     @property
     def ok(self) -> bool:
@@ -112,7 +117,9 @@ class EvalDB:
                         else float(d["value"]), float(d.get("wall_s", 0.0)),
                         str(d.get("tag", "")), str(d.get("workload", "")),
                         str(d.get("fidelity", "")),
-                        str(d.get("status", "ok")))
+                        str(d.get("status", "ok")),
+                        int(d.get("repeats", 1)),
+                        float(d.get("variance", 0.0)))
                 except (json.JSONDecodeError, KeyError, TypeError,
                         ValueError):
                     # a crashed writer leaves a truncated trailing line;
@@ -128,7 +135,8 @@ class EvalDB:
         the JSONL on disk, and reloaded records all compare equal."""
         return EvalRecord({k: _json_safe(v) for k, v in rec.config.items()},
                           float(_json_safe(rec.value)), rec.wall_s, rec.tag,
-                          rec.workload, rec.fidelity, rec.status)
+                          rec.workload, rec.fidelity, rec.status,
+                          int(rec.repeats), float(rec.variance))
 
     @staticmethod
     def _line(rec: EvalRecord) -> str:
@@ -147,6 +155,13 @@ class EvalDB:
             d["fidelity"] = rec.fidelity
         if rec.status != "ok":
             d["status"] = rec.status
+        # replication fields only when an aggregate was recorded: legacy
+        # single-measurement lines stay byte-stable, and legacy logs
+        # reload with the defaults (repeats=1, variance=0.0)
+        if rec.repeats != 1:
+            d["repeats"] = rec.repeats
+        if rec.variance:
+            d["variance"] = rec.variance
         return json.dumps(d) + "\n"
 
     def append(self, rec: EvalRecord):
@@ -210,6 +225,19 @@ class Controller:
     defaults.  The *prepared* config is what the DB records, so the log
     always holds runnable configurations.  ``workload`` names the cell
     (e.g. ``"yi-6b:train_4k"``) every request/record is stamped with.
+
+    ``replication`` (a :class:`~repro.core.replication.ReplicationPolicy`)
+    turns on replicated measurements: the resolved service is wrapped in a
+    :class:`~repro.core.replication.ReplicatingService` that fans every
+    probe into ``initial_repeats`` seed-derived sub-measurements and
+    returns one pooled result (mean + variance-of-mean + repeat count);
+    with ``adaptive=True``, :meth:`run_async` additionally re-measures —
+    through the same in-flight machinery — only the probes whose credible
+    interval still straddles the incumbent best.  ``seed`` pins the whole
+    run's measurement streams: every request is stamped with a
+    deterministic per-submission seed (``fold_seed(seed, counter)``), so
+    a replayed run on a fresh controller + fresh service reproduces every
+    noise draw bit for bit — even through an out-of-order worker pool.
     """
 
     evaluate: Union[Callable[[Config], float], EvaluationService]
@@ -217,18 +245,25 @@ class Controller:
     tag: str = ""
     prepare: Optional[Callable[[Config], Config]] = None
     workload: str = ""
+    replication: Optional[ReplicationPolicy] = None
+    seed: Optional[int] = None
 
     @property
     def service(self) -> EvaluationService:
         svc = getattr(self, "_service", None)
         if svc is None:
             svc = as_service(self.evaluate)
+            if self.replication is not None and self.replication.active:
+                svc = ReplicatingService(
+                    svc, n_repeats=self.replication.initial_repeats,
+                    seed=self.replication.seed)
             self._service = svc
         return svc
 
     def _derive(self, **changes) -> "Controller":
         kw = {"evaluate": self.evaluate, "db": self.db, "tag": self.tag,
-              "prepare": self.prepare, "workload": self.workload}
+              "prepare": self.prepare, "workload": self.workload,
+              "replication": self.replication, "seed": self.seed}
         kw.update(changes)
         c = Controller(**kw)
         # resolve eagerly so every derivative shares THIS controller's
@@ -246,6 +281,16 @@ class Controller:
     def with_workload(self, workload: str) -> "Controller":
         return self._derive(workload=workload)
 
+    def with_replication(self, policy: ReplicationPolicy) -> "Controller":
+        """Derivative with replicated measurements.  Unlike the other
+        ``with_*`` helpers the service is NOT shared: the policy decides
+        how the service wraps, so the derivative resolves its own (the
+        underlying backend object is still the same one)."""
+        kw = {"evaluate": self.evaluate, "db": self.db, "tag": self.tag,
+              "prepare": self.prepare, "workload": self.workload,
+              "replication": policy, "seed": self.seed}
+        return Controller(**kw)
+
     # ---- synchronous evaluation ---------------------------------------------
 
     def __call__(self, cfg: Config) -> float:
@@ -256,24 +301,44 @@ class Controller:
         cfgs = [dict(c) for c in cfgs]
         if self.prepare:
             cfgs = [self.prepare(c) for c in cfgs]
-        return cfgs, [EvalRequest(c, fidelity, self.workload, self.tag)
-                      for c in cfgs]
+        seeds: List[Optional[int]] = [None] * len(cfgs)
+        if self.seed is not None:
+            # per-submission seed stream: request i of a seeded run is the
+            # same measurement on every replay (fresh controller + fresh
+            # service), regardless of service completion order
+            base = getattr(self, "_seed_count", 0)
+            self._seed_count = base + len(cfgs)
+            seeds = [fold_seed(self.seed, base + i)
+                     for i in range(len(cfgs))]
+        return cfgs, [EvalRequest(c, fidelity, self.workload, self.tag, s)
+                      for c, s in zip(cfgs, seeds)]
 
     def _record(self, result: EvalResult, cfg: Config, value: float,
                 wall_s: Optional[float] = None) -> EvalRecord:
         return EvalRecord(cfg, value,
                           result.wall_s if wall_s is None else wall_s,
                           self.tag, self.workload, result.request.fidelity,
-                          result.status)
+                          result.status, int(result.repeats),
+                          float(result.variance))
 
-    def evaluate_batch(self, cfgs: Sequence[Config],
-                       fidelity: str = DEFAULT_FIDELITY) -> List[float]:
-        """Submit a whole batch and block for it (the synchronous
-        contract): one tagged DB append, each record's ``wall_s`` the
-        batch wall-clock amortized per config.  A failed evaluation is
-        recorded (status ``failed``) and then raised — synchronous callers
-        treat a broken benchmark as an error; the async loop is the path
-        that survives failures."""
+    @staticmethod
+    def _teller(strategy: SearchStrategy):
+        """Variance-aware tell, feature-detected (the same pattern as the
+        poll ``min_results`` probe): strategies whose ``tell`` accepts a
+        ``variances`` argument get the per-observation measurement
+        variance alongside the values; legacy two-argument strategies are
+        told exactly as before."""
+        try:
+            wants = ("variances"
+                     in inspect.signature(strategy.tell).parameters)
+        except (TypeError, ValueError):
+            wants = False
+        if wants:
+            return strategy.tell
+        return lambda cfgs, vals, variances=None: strategy.tell(cfgs, vals)
+
+    def _evaluate_sync(self, cfgs: Sequence[Config],
+                       fidelity: str) -> List[EvalResult]:
         svc = self.service
         cfgs, reqs = self._requests(cfgs, fidelity)
         t0 = time.monotonic()
@@ -286,7 +351,18 @@ class Controller:
             raise RuntimeError(
                 f"{len(failed)}/{len(results)} evaluations failed; "
                 f"first: {failed[0].error}") from failed[0].exception
-        return [float(r.value) for r in results]
+        return results
+
+    def evaluate_batch(self, cfgs: Sequence[Config],
+                       fidelity: str = DEFAULT_FIDELITY) -> List[float]:
+        """Submit a whole batch and block for it (the synchronous
+        contract): one tagged DB append, each record's ``wall_s`` the
+        batch wall-clock amortized per config.  A failed evaluation is
+        recorded (status ``failed``) and then raised — synchronous callers
+        treat a broken benchmark as an error; the async loop is the path
+        that survives failures."""
+        return [float(r.value)
+                for r in self._evaluate_sync(cfgs, fidelity)]
 
     # ---- the experiment loop ------------------------------------------------
 
@@ -305,6 +381,7 @@ class Controller:
         """
         spent = 0
         rnd = 0
+        tell = self._teller(strategy)
         while not strategy.finished:
             n = batch_size
             remaining = None
@@ -321,8 +398,9 @@ class Controller:
                 # cap the spend without distorting the strategy's batch
                 # width: the final round is truncated, not re-asked
                 cfgs = cfgs[:remaining]
-            vals = self.evaluate_batch(cfgs, fidelity=fidelity)
-            strategy.tell(cfgs, vals)
+            results = self._evaluate_sync(cfgs, fidelity)
+            vals = [float(r.value) for r in results]
+            tell(cfgs, vals, [float(r.variance) for r in results])
             spent += len(cfgs)
             if on_round is not None:
                 on_round(rnd, cfgs, vals)
@@ -401,6 +479,13 @@ class Controller:
         (see ``benchmarks/perf_gp_ask.py``).
         """
         svc = self.service
+        # adaptive replication: completed probes whose credible interval
+        # straddles the incumbent are held back and re-measured through
+        # the same service before being told (racing, not fixed-k)
+        racer = None
+        if self.replication is not None and self.replication.adaptive:
+            racer = AdaptiveRacer(self.replication, svc)
+        tell = self._teller(strategy)
         auto_cap = auto_width = None
         if max_in_flight is None:
             auto_width = _batch_width(strategy, batch_size)
@@ -478,22 +563,24 @@ class Controller:
                 penalty = 1e6       # the whole run failed: scale unknowable
             asked_cfgs: List[Config] = []
             values: List[float] = []
+            variances: List[float] = []
             records: List[EvalRecord] = []
             for r, asked_c, prepared_c in wave:
                 v = float(r.value) if r.ok else penalty
                 records.append(self._record(r, prepared_c, v))
                 asked_cfgs.append(asked_c)
                 values.append(v)
+                variances.append(float(r.variance) if r.ok else 0.0)
             if records:
                 self.db.append_batch(records)
-                strategy.tell(asked_cfgs, values)
+                tell(asked_cfgs, values, variances)
                 if on_round is not None:
                     on_round(rnd, asked_cfgs, values)
                 rnd += 1
 
         while True:
             submit_more()
-            if not pending:
+            if not pending and (racer is None or not racer.busy):
                 if deferred:
                     # nothing in flight and nothing succeeded yet: price
                     # the held failures at the fallback so a blocked
@@ -507,7 +594,7 @@ class Controller:
                 # in flight), matching the coalesced ask cadence — but at
                 # the budget tail never hold more slots than the run can
                 # still submit, or the last probes idle behind the wave
-                want = min(min_ask, len(pending))
+                want = max(min(min_ask, len(pending)), 1)
                 if budget is not None and 0 < budget - spent < want:
                     want = budget - spent
                 results = svc.poll(timeout=None, min_results=want)
@@ -516,10 +603,25 @@ class Controller:
             if not results:
                 # the protocol: poll(None) returns empty only when nothing
                 # is in flight — any pending entries left are orphaned
-                # (claimed elsewhere or lost) and nothing more will come
+                # (claimed elsewhere or lost) and nothing more will come.
+                # (the racer cannot be busy here: every racing group has a
+                # follow-up in flight, so an empty drain settles them too)
                 break
-            wave = [(r, *e) for r in results
-                    if (e := pending.pop(r.ticket.uid, None)) is not None]
+            if racer is None:
+                wave = [(r, *e) for r in results
+                        if (e := pending.pop(r.ticket.uid, None)) is not None]
+            else:
+                # route completions through the racer: first completions
+                # (pending) may be held for re-measurement, follow-up
+                # completions re-decide their group; only settled probes
+                # enter the tell wave
+                wave = []
+                for r in results:
+                    e = pending.pop(r.ticket.uid, None)
+                    settled = (racer.offer(r.ticket.uid, r, *e)
+                               if e is not None else racer.absorb(r))
+                    if settled is not None:
+                        wave.append(settled)
             # two passes: every ok value in the wave raises the penalty
             # floor *before* any failure is priced, so an early failure
             # can't be told a deceptively good value

@@ -59,12 +59,25 @@ def _trim_history(history: list, cap: Optional[int]):
         del history[:len(history) - cap]
 
 
-def _stable_seed(cfg: Config, salt: int) -> int:
+def _stable_seed(cfg: Config, salt) -> int:
     """Noise must be i.i.d. per *evaluation*, not per config — repeated
-    probes of one config see fresh noise (the paper's averaging dilemma)."""
+    probes of one config see fresh noise (the paper's averaging dilemma).
+    ``salt`` is the stream selector: the call-indexed int for unseeded
+    evaluations, or the ``"seed:<n>"`` tag for request-seeded ones (the
+    string prefix keeps the two streams disjoint — a request seed can
+    never collide with a call index)."""
     s = json.dumps({k: str(v) for k, v in sorted(cfg.items())}, sort_keys=True)
     h = hashlib.blake2s(f"{s}|{salt}".encode()).digest()[:8]
     return int.from_bytes(h, "little") >> 1      # 63-bit: fits PRNGKey int64
+
+
+def _noise_salt(seed: Optional[int], call_salt: int):
+    """Replicated-measurement contract: a request that carries a seed
+    draws noise from the seed-pinned stream — bit-reproducible for the
+    same (config, seed) no matter which service, batch position or call
+    count delivers it; an unseeded request keeps the legacy call-indexed
+    stream (fresh i.i.d. noise per evaluation)."""
+    return call_salt if seed is None else f"seed:{seed}"
 
 
 def _key_data(seed: int) -> np.ndarray:
@@ -106,12 +119,17 @@ class AnalyticEvaluator:
                              "feasible": bd.feasible})
         _trim_history(self.history, self.history_cap)
 
-    def __call__(self, knobs: Config) -> float:
+    # the evaluation-service layer passes per-request seeds through the
+    # batched path when this attribute is set (see service._score_batch)
+    accepts_seeds = True
+
+    def __call__(self, knobs: Config, seed: Optional[int] = None) -> float:
         bd = self.breakdown(knobs)
         self.calls += 1
         noise = 1.0
         if self.noise_sigma > 0:
-            keys = _key_data(_stable_seed(knobs, self.seed + self.calls))
+            salt = _noise_salt(seed, self.seed + self.calls)
+            keys = _key_data(_stable_seed(knobs, salt))
             noise = float(_lognoise(jnp.asarray(keys[None]),
                                     self.noise_sigma)[0])
         step = bd.step_s * noise
@@ -120,13 +138,20 @@ class AnalyticEvaluator:
 
     def evaluate_batch_detailed(
             self, configs: Sequence[Config],
+            seeds: Optional[Sequence[Optional[int]]] = None,
     ) -> Tuple[np.ndarray, List[CostBreakdown]]:
         """Score n configs in one shot, returning the per-config cost
         breakdowns alongside the noisy step times — what the evaluation
         *service* reports as feasibility without re-running the cost
         model.  Same noise stream as n sequential ``__call__``\\ s (each
-        row keeps its own eval-indexed noise key)."""
+        row keeps its own eval-indexed noise key).  A per-row entry in
+        ``seeds`` pins that row to the seed's noise stream instead (the
+        replication contract: bit-identical for the same (config, seed)
+        regardless of batch position or call count); ``None`` rows keep
+        the call-indexed stream."""
         cfgs = list(configs)
+        if seeds is None:
+            seeds = [None] * len(cfgs)
         if not cfgs:
             return np.zeros(0, np.float64), []
         bds = [self.breakdown(c) for c in cfgs]
@@ -135,8 +160,9 @@ class AnalyticEvaluator:
         steps = np.asarray([bd.step_s for bd in bds], np.float64)
         if self.noise_sigma > 0:
             keys = np.stack([
-                _key_data(_stable_seed(c, self.seed + base + i + 1))
-                for i, c in enumerate(cfgs)])
+                _key_data(_stable_seed(
+                    c, _noise_salt(s, self.seed + base + i + 1)))
+                for i, (c, s) in enumerate(zip(cfgs, seeds))])
             noise = np.asarray(
                 _lognoise(jnp.asarray(keys), self.noise_sigma), np.float64)
             steps = steps * noise

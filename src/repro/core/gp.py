@@ -181,9 +181,14 @@ def _bucket(n: int) -> int:
 
 
 def _prepare(x: np.ndarray, y: np.ndarray, pad: bool,
-             pad_to: Optional[int] = None):
+             pad_to: Optional[int] = None,
+             obs_var: Optional[np.ndarray] = None):
     """Standardize y and append huge-noise pseudo-points up to the target
-    shape (``pad_to`` or the next bucket)."""
+    shape (``pad_to`` or the next bucket).  ``obs_var`` [n] is the
+    per-observation measurement variance in *raw* y units (replicated
+    measurements report the variance of their mean); it lands on the same
+    extra-noise diagonal the pads use, rescaled by 1/y_std² to match the
+    standardized targets."""
     x = np.asarray(x, np.float32)
     y_raw = np.asarray(y, np.float32)
     n, d = x.shape
@@ -192,13 +197,18 @@ def _prepare(x: np.ndarray, y: np.ndarray, pad: bool,
         y_std = 1.0
     ys = (y_raw - y_mean) / y_std
     extra = None
+    if obs_var is not None:
+        extra = np.asarray(obs_var, np.float32) / (y_std * y_std)
     if pad or pad_to:
         m = max(_bucket(n), pad_to or 0)
         if m > n:
             x = np.vstack([x, np.full((m - n, d), 0.5, np.float32)])
             ys = np.concatenate([ys, np.zeros(m - n, np.float32)])
-            extra = np.zeros(m, np.float32)
-            extra[n:] = PAD_NOISE
+            padded = np.zeros(m, np.float32)
+            if extra is not None:
+                padded[:n] = extra
+            padded[n:] = PAD_NOISE
+            extra = padded
     xj = jnp.asarray(x)
     yj = jnp.asarray(ys)
     ej = None if extra is None else jnp.asarray(extra)
@@ -208,7 +218,8 @@ def _prepare(x: np.ndarray, y: np.ndarray, pad: bool,
 def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
         steps: int = 200, params: Optional[GPParams] = None,
         pad: bool = True, pad_to: Optional[int] = None,
-        use_pallas: bool = False) -> GPState:
+        use_pallas: bool = False,
+        obs_var: Optional[np.ndarray] = None) -> GPState:
     """Standardize y, fit hyperparameters, build the posterior.
 
     ``pad`` appends huge-noise pseudo-points up to a shape bucket so the
@@ -221,12 +232,25 @@ def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
     ``params`` warm-starts the hyperparameter optimization (e.g. from the
     previous BO round's posterior); with ``steps=0`` they are used as-is.
 
+    ``obs_var`` [n] makes the GP heteroscedastic: per-observation
+    measurement variance (raw y units — replicated measurements report
+    the variance of their pooled mean) added to the noise diagonal on top
+    of the fitted global scalar, through the same ``extra_noise``
+    machinery the pads use.  The jitted ``lax.scan`` Adam loop and the
+    Pallas gram route are untouched — extra noise only enters the
+    diagonal stamp.  ``None`` (the default) is bit-identical to the
+    homoscedastic path, and :func:`predict` / :func:`select_batch` /
+    :func:`select_batch_sharded` need no variance argument: the
+    heteroscedastic diagonal is baked into ``state.chol``, and fantasy
+    appends deliberately keep the global-scalar diagonal (a fantasy point
+    has no empirical repeat variance).
+
     ``use_pallas`` routes the posterior Gram build through the
     kernels/gp_gram tile kernel (matern52 only; jnp fallback otherwise).
     The marginal-likelihood Adam loop stays on the jnp kernel — it is
     differentiated, and the Pallas kernel defines no VJP.
     """
-    xj, yj, ej, y_mean, y_std = _prepare(x, y, pad, pad_to)
+    xj, yj, ej, y_mean, y_std = _prepare(x, y, pad, pad_to, obs_var)
     if params is None:
         params = init_params(int(xj.shape[1]))
     if steps > 0:
@@ -240,7 +264,8 @@ def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
 def condition(params: GPParams, x: np.ndarray, y: np.ndarray,
               kind: str = "matern52", pad: bool = True,
               pad_to: Optional[int] = None,
-              use_pallas: bool = False) -> GPState:
+              use_pallas: bool = False,
+              obs_var: Optional[np.ndarray] = None) -> GPState:
     """Posterior for (x, y) under *fixed* hyperparameters — no
     marginal-likelihood refit.  This is the constant-liar fantasy update
     of q-batch acquisition: one Cholesky rebuild, no Adam.  (The
@@ -248,7 +273,7 @@ def condition(params: GPParams, x: np.ndarray, y: np.ndarray,
     with an O(n²) :func:`chol_append`; ``condition`` remains the
     reference path and the entry for one-off posterior updates.)"""
     return fit(x, y, kind, steps=0, params=params, pad=pad, pad_to=pad_to,
-               use_pallas=use_pallas)
+               use_pallas=use_pallas, obs_var=obs_var)
 
 
 @partial(jax.jit, static_argnames=("kind", "use_pallas"))

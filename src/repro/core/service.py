@@ -42,6 +42,7 @@ the Controller boundary.
 
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
 from dataclasses import dataclass, replace
@@ -51,6 +52,16 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
 from repro.core.space import Config
 
 DEFAULT_FIDELITY = "test"
+
+
+def fold_seed(seed: int, i: int) -> int:
+    """Derive sub-stream ``i`` of ``seed`` (``jax.random.fold_in``-style
+    splitting, host-side): deterministic, stable across processes, and
+    collision-resistant, so a replicated request fans into repeats whose
+    noise streams are independent yet bit-reproducible.  Stays in the
+    63-bit range the analytic evaluator's key builder expects."""
+    h = hashlib.blake2s(f"fold|{seed}|{i}".encode()).digest()[:8]
+    return int.from_bytes(h, "little") >> 1
 
 
 # ---------------------------------------------------------------------------
@@ -65,15 +76,21 @@ class EvalRequest:
     service routes on it); ``workload`` names the cell the measurement
     belongs to (e.g. ``"yi-6b:train_4k"``) so a shared evaluation database
     can be sliced per workload; ``tag`` is the experiment phase (``rank``,
-    ``bo``, ``screen``…).  ``seed`` is carried for services that replicate
-    measurements; the built-in services record it untouched (the analytic
-    evaluator's noise is already indexed per evaluation).
+    ``bo``, ``screen``…).  ``seed`` pins the measurement's noise stream:
+    the built-in services pass it to seed-aware backends
+    (``accepts_seeds`` / ``wants_request``), making any (config,
+    fidelity, seed) probe bit-reproducible — the replication contract.
+    ``n_repeats`` lets a single request override a
+    :class:`~repro.core.replication.ReplicatingService`'s default repeat
+    count (the adaptive re-measurement path submits 1-repeat top-ups);
+    services that do not replicate ignore it.
     """
     config: Config
     fidelity: str = DEFAULT_FIDELITY
     workload: str = ""
     tag: str = ""
     seed: Optional[int] = None
+    n_repeats: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -98,6 +115,16 @@ class EvalResult:
     error: str = ""
     wall_s: float = 0.0
     exception: Optional[BaseException] = None
+    # replication fields (ReplicatingService aggregates): ``value`` is the
+    # empirical mean over ``repeats`` successful measurements, ``variance``
+    # the variance OF THAT MEAN (failure-widened: failed repeats shrink
+    # the effective sample without touching the mean), ``failures`` how
+    # many repeats failed.  Single measurements keep the defaults —
+    # variance 0.0 means "no empirical noise estimate", and downstream
+    # consumers (the heteroscedastic GP) fall back to the global scalar.
+    variance: float = 0.0
+    repeats: int = 1
+    failures: int = 0
 
     @property
     def ok(self) -> bool:
@@ -255,12 +282,23 @@ def _failed(e: BaseException) -> _Scored:
     return float("nan"), False, None, "failed", repr(e), e
 
 
+def _seeds_of(requests: Optional[Sequence[Optional[EvalRequest]]],
+              n: int) -> List[Optional[int]]:
+    if requests is None:
+        return [None] * n
+    return [r.seed if r is not None else None for r in requests]
+
+
 def _score_one(backend, cfg: Config,
                request: Optional[EvalRequest] = None) -> _Scored:
+    seed = request.seed if request is not None else None
     try:
         detailed = getattr(backend, "evaluate_batch_detailed", None)
         if detailed is not None:
-            (v,), (bd,) = detailed([cfg])
+            if seed is not None and getattr(backend, "accepts_seeds", False):
+                (v,), (bd,) = detailed([cfg], seeds=[seed])
+            else:
+                (v,), (bd,) = detailed([cfg])
             return float(v), bool(bd.feasible), bd, "ok", "", None
         if request is not None and getattr(backend, "wants_request", False):
             # request-aware backends (e.g. kernels.autotune.KernelEvaluator)
@@ -280,11 +318,18 @@ def _score_batch(backend, cfgs: Sequence[Config],
     noise stream); if it raises — or returns the wrong number of values,
     which would otherwise orphan tickets and deadlock gather/drain — each
     config is retried alone so one bad config fails one result, not the
-    whole batch."""
+    whole batch.  Request seeds ride the batch path on seed-aware
+    backends (``accepts_seeds``) so a seeded probe draws the same noise
+    whether it is scored batched, alone, or by a worker thread."""
+    seeds = _seeds_of(requests, len(cfgs))
     try:
         detailed = getattr(backend, "evaluate_batch_detailed", None)
         if detailed is not None:
-            vals, bds = detailed(cfgs)
+            if (any(s is not None for s in seeds)
+                    and getattr(backend, "accepts_seeds", False)):
+                vals, bds = detailed(cfgs, seeds=seeds)
+            else:
+                vals, bds = detailed(cfgs)
             out = [(float(v), bool(bd.feasible), bd, "ok", "", None)
                    for v, bd in zip(vals, bds)]
             if len(out) == len(cfgs):

@@ -63,16 +63,24 @@ class Trace:
     values: List[float] = field(default_factory=list)
     best_values: List[float] = field(default_factory=list)   # running min
     boundary_events: List[Tuple[int, str]] = field(default_factory=list)
+    # per-observation measurement variance (variance of the reported mean,
+    # from replicated measurements); 0.0 = "no empirical noise estimate" —
+    # the GP then falls back to its fitted global noise scalar for the row
+    variances: List[float] = field(default_factory=list)
 
     @property
     def best(self) -> Tuple[Config, float]:
         i = int(np.argmin(self.values))
         return self.configs[i], self.values[i]
 
-    def extend(self, configs: Sequence[Config], values: Sequence[float]):
-        for c, v in zip(configs, values):
+    def extend(self, configs: Sequence[Config], values: Sequence[float],
+               variances: Optional[Sequence[float]] = None):
+        if variances is None:
+            variances = [0.0] * len(configs)
+        for c, v, var in zip(configs, values, variances):
             self.configs.append(c)
             self.values.append(float(v))
+            self.variances.append(float(var))
             self.best_values.append(min(self.best_values[-1], float(v))
                                     if self.best_values else float(v))
 
@@ -180,10 +188,13 @@ class SearchStrategy(Protocol):
         the budget is exhausted or the strategy is blocked on ``tell``."""
         ...
 
-    def tell(self, configs: Sequence[Config],
-             values: Sequence[float]) -> None:
+    def tell(self, configs: Sequence[Config], values: Sequence[float],
+             variances: Optional[Sequence[float]] = None) -> None:
         """Report results.  Partial batches, out-of-order results and
-        never-asked (injected) observations are all accepted."""
+        never-asked (injected) observations are all accepted.
+        ``variances`` carries per-observation measurement variance from
+        replicated measurements (0.0 = no estimate); strategies that
+        cannot use it store it in the trace and ignore it."""
         ...
 
     def best(self) -> Tuple[Config, float]:
@@ -379,13 +390,16 @@ class BOStrategy(_StrategyBase):
                      else max(cfg.fit_steps // 3, 20))
         return warm, steps
 
-    def _fit_gp(self, x: np.ndarray, y: np.ndarray):
+    def _fit_gp(self, x: np.ndarray, y: np.ndarray,
+                obs_var: Optional[np.ndarray] = None):
         warm, steps = self._fit_args()
         cfg = self.cfg
         return gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
-                      pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+                      pad_to=self._pad_to, use_pallas=cfg.use_pallas,
+                      obs_var=obs_var)
 
-    def _refit(self, x: np.ndarray, y: np.ndarray):
+    def _refit(self, x: np.ndarray, y: np.ndarray,
+               obs_var: Optional[np.ndarray] = None):
         """refit_async: harvest a landed background fit and return the
         last completed posterior *with the data it was fitted on* —
         fantasy appends must extend the matrix the Cholesky factors.
@@ -395,10 +409,10 @@ class BOStrategy(_StrategyBase):
         if fut is not None and fut.done():
             self._refit_future = None
             state = fut.result()            # a failed fit surfaces here
-            self._posterior = (state,) + self._refit_snapshot
+            self._posterior = (state,) + self._refit_snapshot[:2]
             self._params = state.params
         if self._posterior is None:
-            state = self._fit_gp(x, y)
+            state = self._fit_gp(x, y, obs_var)
             self._params = state.params
             self._posterior = (state, x, y)
             self._refit_len = len(self.trace.values)
@@ -418,7 +432,7 @@ class BOStrategy(_StrategyBase):
         return spare_device()
 
     def _fit_background(self, x: np.ndarray, y: np.ndarray, steps: int,
-                        warm):
+                        warm, obs_var: Optional[np.ndarray] = None):
         """The executor task: a pure gp.fit, pinned via
         ``jax.default_device`` to the spare device so the Adam loop's
         dispatches never queue in front of the driver's selection work,
@@ -427,15 +441,18 @@ class BOStrategy(_StrategyBase):
         dev = self._refit_device()
         if dev is None:
             return gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
-                          pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+                          pad_to=self._pad_to, use_pallas=cfg.use_pallas,
+                          obs_var=obs_var)
         import jax
         with jax.default_device(dev):
             state = gp.fit(x, y, cfg.kernel, steps=steps, params=warm,
-                           pad_to=self._pad_to, use_pallas=cfg.use_pallas)
+                           pad_to=self._pad_to, use_pallas=cfg.use_pallas,
+                           obs_var=obs_var)
         home = jax.devices()[0]
         return jax.tree.map(lambda a: jax.device_put(a, home), state)
 
-    def _refit_kick(self, x: np.ndarray, y: np.ndarray):
+    def _refit_kick(self, x: np.ndarray, y: np.ndarray,
+                    obs_var: Optional[np.ndarray] = None):
         """Kick a background refit on the (x, y) snapshot when fresh
         observations arrived — or when boundary expansion re-encoded the
         trace (same observation count, different inputs).  Called at the
@@ -451,13 +468,13 @@ class BOStrategy(_StrategyBase):
         warm, steps = self._fit_args()
         self._refit_len = len(self.trace.values)
         self._refit_space_version = self._space_version
-        self._refit_snapshot = (x, y)
+        self._refit_snapshot = (x, y, obs_var)
         if self._refit_pool is None:
             from concurrent.futures import ThreadPoolExecutor
             self._refit_pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="gp-refit")
         self._refit_future = self._refit_pool.submit(
-            self._fit_background, x, y, steps, warm)
+            self._fit_background, x, y, steps, warm, obs_var)
 
     def close(self):
         """Join the background refit executor (refit_async mode).  An
@@ -535,12 +552,23 @@ class BOStrategy(_StrategyBase):
         cfg = self.cfg
         x = self.space.encode_batch(self.trace.configs)
         y = np.asarray(self.trace.values, np.float64)
+        # heteroscedastic channel: replicated measurements report the
+        # variance of their pooled mean; rows without an estimate stay at
+        # 0.0 (global-scalar fallback).  All-zero variances pass None so
+        # the homoscedastic path stays bit-identical to pre-replication
+        # traces.  Under log_objective the delta method maps raw variance
+        # onto the log scale: var[log y] ≈ var[y] / y².
+        obs = None
+        var = np.asarray(self.trace.variances, np.float64)
+        if var.size == y.size and np.any(var > 0):
+            obs = var / np.maximum(y, 1e-12) ** 2 if cfg.log_objective \
+                else var.copy()
         if cfg.log_objective:
             y = np.log(np.maximum(y, 1e-12))
         if cfg.refit_async:
-            state, x_fit, y_fit = self._refit(x, y)
+            state, x_fit, y_fit = self._refit(x, y, obs)
         else:
-            state = self._fit_gp(x, y)
+            state = self._fit_gp(x, y, obs)
             self._params = state.params
             x_fit, y_fit = x, y
 
@@ -603,14 +631,15 @@ class BOStrategy(_StrategyBase):
             # coordinates for the rest of the run
             if expanded:
                 x = self.space.encode_batch(self.trace.configs)
-            self._refit_kick(x, y)
+            self._refit_kick(x, y, obs)
         for c in probes:
             self._pending.add(c)
         return probes
 
-    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+    def tell(self, configs: Sequence[Config], values: Sequence[float],
+             variances: Optional[Sequence[float]] = None):
         configs = [dict(c) for c in configs]
-        self.trace.extend(configs, values)
+        self.trace.extend(configs, values, variances)
         for c in configs:
             if self._pending_init.pop(c)[0]:
                 continue
@@ -659,9 +688,10 @@ class RandomStrategy(_StrategyBase):
             self._pending.add(c)
         return out
 
-    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+    def tell(self, configs: Sequence[Config], values: Sequence[float],
+             variances: Optional[Sequence[float]] = None):
         configs = [dict(c) for c in configs]
-        self.trace.extend(configs, values)
+        self.trace.extend(configs, values, variances)
         for c in configs:
             if self._match_pending(c):
                 self._told += 1
@@ -711,9 +741,10 @@ class AnnealingStrategy(_StrategyBase):
             self._pending.add(c)
         return out
 
-    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+    def tell(self, configs: Sequence[Config], values: Sequence[float],
+             variances: Optional[Sequence[float]] = None):
         configs = [dict(c) for c in configs]
-        self.trace.extend(configs, values)
+        self.trace.extend(configs, values, variances)
         for c, v in zip(configs, values):
             if not self._match_pending(c):
                 continue                     # injected observation
@@ -781,9 +812,10 @@ class GeneticStrategy(_StrategyBase):
             out.append(c)
         return out
 
-    def tell(self, configs: Sequence[Config], values: Sequence[float]):
+    def tell(self, configs: Sequence[Config], values: Sequence[float],
+             variances: Optional[Sequence[float]] = None):
         configs = [dict(c) for c in configs]
-        self.trace.extend(configs, values)
+        self.trace.extend(configs, values, variances)
         for c, v in zip(configs, values):
             matched, i = self._pending_idx.pop(c)
             if matched:

@@ -1,0 +1,223 @@
+"""Property tests for repeat aggregation and the heteroscedastic GP.
+
+Invariants (the algebra the replication layer leans on):
+
+* pooled mean / m2 are invariant to repeat order and to any merge/split
+  of repeat groups (Chan et al.'s parallel formula);
+* failed repeats never shift the pooled mean — they only widen the
+  variance of the mean;
+* ``RepeatStats.from_result`` is the exact inverse of the aggregation
+  for ``repeats >= 2``;
+* the heteroscedastic GP posterior reduces to the scalar-noise posterior
+  when every row variance is equal, and the ``obs_var=None`` path is
+  bit-identical to the pre-replication build.
+
+Each property runs twice when `hypothesis` is installed (CI installs it;
+the container baseline does not): once as a hypothesis ``@given`` search
+and once as a fixed numpy-parametrized draw that always executes — the
+suite never silently loses coverage to a missing optional dependency.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import gp
+from repro.core.replication import RepeatStats, aggregate_repeats
+from repro.core.service import EvalRequest, EvalResult, EvalTicket
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # container baseline: numpy-only
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed (CI-only dep)")
+
+
+# ---------------------------------------------------------------------------
+# the invariants, written once, driven from both harnesses
+# ---------------------------------------------------------------------------
+
+def check_order_invariance(vals, perm):
+    a = RepeatStats.from_values(vals)
+    b = RepeatStats.from_values([vals[i] for i in perm])
+    assert a.count == b.count
+    assert np.isclose(a.mean, b.mean, rtol=1e-12, atol=1e-12)
+    assert np.isclose(a.m2, b.m2, rtol=1e-9, atol=1e-12)
+    assert np.isclose(a.mean_var, b.mean_var, rtol=1e-9, atol=1e-15)
+
+
+def check_merge_split_invariance(vals, cut):
+    whole = RepeatStats.from_values(vals)
+    left = RepeatStats.from_values(vals[:cut])
+    right = RepeatStats.from_values(vals[cut:])
+    merged = left.merge(right)
+    assert merged.count == whole.count
+    assert np.isclose(merged.mean, whole.mean, rtol=1e-12, atol=1e-12)
+    assert np.isclose(merged.m2, whole.m2, rtol=1e-9, atol=1e-12)
+    # merge is symmetric
+    flipped = right.merge(left)
+    assert np.isclose(flipped.mean, merged.mean, rtol=1e-12, atol=1e-12)
+    assert np.isclose(flipped.m2, merged.m2, rtol=1e-9, atol=1e-12)
+
+
+def check_failures_never_shift_mean(vals, n_failures):
+    clean = RepeatStats.from_values(vals)
+    dirty = RepeatStats.from_values(vals, failures=n_failures)
+    assert dirty.mean == clean.mean
+    assert dirty.obs_var == clean.obs_var
+    if clean.count >= 2 and clean.obs_var > 0:
+        # widening is exactly (k + f)/k, monotone in f
+        assert dirty.mean_var == pytest.approx(
+            clean.mean_var * (clean.count + n_failures) / clean.count)
+        assert dirty.mean_var >= clean.mean_var
+
+
+def check_result_roundtrip(vals, n_failures):
+    t = EvalTicket(0, EvalRequest({"x": 0.5}))
+    reps = [EvalResult(EvalTicket(i + 1, t.request), v, wall_s=1.0)
+            for i, v in enumerate(vals)]
+    reps += [EvalResult(EvalTicket(99 + i, t.request), float("nan"),
+                        "failed", False, None, "boom", 1.0,
+                        RuntimeError("boom")) for i in range(n_failures)]
+    agg = aggregate_repeats(t, reps)
+    back = RepeatStats.from_result(agg)
+    direct = RepeatStats.from_values(vals, failures=n_failures)
+    assert back.count == direct.count
+    assert back.failures == direct.failures
+    assert np.isclose(back.mean, direct.mean, rtol=1e-12, atol=1e-12)
+    assert np.isclose(back.mean_var, direct.mean_var,
+                      rtol=1e-9, atol=1e-15)
+
+
+def check_hetero_reduces_to_scalar(seed, v):
+    rng = np.random.default_rng(seed)
+    x = rng.random((12, 3)).astype(np.float32)
+    y = np.sin(3 * x.sum(1)) + 0.05 * rng.standard_normal(12)
+    params = gp.init_params(3)
+    hetero = gp.condition(params, x, y, pad=False,
+                          obs_var=np.full(12, v, np.float64))
+    # equal row variances == a larger global noise scalar.  obs_var is
+    # raw-units and internally rescaled by 1/y_std²; fold the same term
+    # into log_noise_var for the scalar build.
+    import jax.numpy as jnp
+    y_std = float(np.asarray(y, np.float32).std())
+    if y_std < 1e-12:
+        y_std = 1.0
+    bumped = params._replace(log_noise_var=jnp.log(
+        jnp.exp(params.log_noise_var)
+        + jnp.float32(v / (y_std * y_std))))
+    scalar = gp.condition(bumped, x, y, pad=False)
+    xq = rng.random((6, 3)).astype(np.float32)
+    mh, sh = gp.predict(hetero, xq)
+    ms, ss = gp.predict(scalar, xq)
+    np.testing.assert_allclose(np.asarray(mh), np.asarray(ms),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sh), np.asarray(ss),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# always-run fallback: fixed numpy draws (was hypothesis @given)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_order_invariance_fixed(seed):
+    rng = np.random.default_rng(seed)
+    vals = list(rng.lognormal(0, 1, size=rng.integers(1, 12)))
+    check_order_invariance(vals, list(rng.permutation(len(vals))))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_merge_split_invariance_fixed(seed):
+    rng = np.random.default_rng(seed)
+    vals = list(rng.lognormal(0, 1, size=rng.integers(2, 12)))
+    check_merge_split_invariance(vals, int(rng.integers(0, len(vals) + 1)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_failures_never_shift_mean_fixed(seed):
+    rng = np.random.default_rng(seed)
+    vals = list(rng.lognormal(0, 1, size=rng.integers(1, 10)))
+    check_failures_never_shift_mean(vals, int(rng.integers(0, 5)))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_result_roundtrip_fixed(seed):
+    rng = np.random.default_rng(seed)
+    vals = list(rng.lognormal(0, 1, size=rng.integers(1, 8)))
+    check_result_roundtrip(vals, int(rng.integers(0, 3)))
+
+
+@pytest.mark.parametrize("seed,v", [(0, 0.01), (1, 0.5), (2, 2.0)])
+def test_hetero_reduces_to_scalar_fixed(seed, v):
+    check_hetero_reduces_to_scalar(seed, v)
+
+
+def test_obs_var_none_bit_identical():
+    # the pre-replication build must be untouched byte for byte
+    rng = np.random.default_rng(0)
+    x = rng.random((9, 2)).astype(np.float32)
+    y = (x ** 2).sum(1)
+    p = gp.init_params(2)
+    a = gp.fit(x, y, steps=0, params=p, pad=True)
+    b = gp.fit(x, y, steps=0, params=p, pad=True, obs_var=None)
+    assert bool(np.all(np.asarray(a.chol) == np.asarray(b.chol)))
+    assert bool(np.all(np.asarray(a.alpha) == np.asarray(b.alpha)))
+
+
+def test_empty_and_singleton_stats():
+    empty = RepeatStats()
+    assert empty.count == 0 and empty.obs_var == 0.0 and empty.mean_var == 0.0
+    one = RepeatStats.from_values([3.0])
+    assert one.mean == 3.0 and one.obs_var == 0.0 and one.mean_var == 0.0
+    # merging with empty is the identity (plus failure accounting)
+    merged = empty.merge(one)
+    assert merged.mean == 3.0 and merged.count == 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven variants (CI installs hypothesis; skipped locally)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    finite_vals = st.lists(
+        st.floats(min_value=1e-6, max_value=1e6,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=16)
+
+    @needs_hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(vals=finite_vals, data=st.data())
+    def test_order_invariance_hyp(vals, data):
+        perm = data.draw(st.permutations(range(len(vals))))
+        check_order_invariance(vals, list(perm))
+
+    @needs_hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(vals=finite_vals, data=st.data())
+    def test_merge_split_invariance_hyp(vals, data):
+        cut = data.draw(st.integers(min_value=0, max_value=len(vals)))
+        check_merge_split_invariance(vals, cut)
+
+    @needs_hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(vals=finite_vals,
+           n_failures=st.integers(min_value=0, max_value=6))
+    def test_failures_never_shift_mean_hyp(vals, n_failures):
+        check_failures_never_shift_mean(vals, n_failures)
+
+    @needs_hypothesis
+    @settings(max_examples=30, deadline=None)
+    @given(vals=finite_vals,
+           n_failures=st.integers(min_value=0, max_value=3))
+    def test_result_roundtrip_hyp(vals, n_failures):
+        check_result_roundtrip(vals, n_failures)
+
+    @needs_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           v=st.floats(min_value=1e-3, max_value=5.0))
+    def test_hetero_reduces_to_scalar_hyp(seed, v):
+        check_hetero_reduces_to_scalar(seed, v)

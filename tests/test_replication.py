@@ -1,0 +1,422 @@
+"""Seed-determinism + replication suite (the paper's averaging dilemma).
+
+Pins the replication contract end to end: a seeded (config, fidelity,
+seed) probe is bit-reproducible across every service path (immediate,
+worker pool, adapter, router — regardless of completion order), a
+ReplicatingService aggregate is invariant to which inner service ran the
+repeats, and a replayed ``run_async`` on a fresh controller reproduces
+its trace bit for bit under a fixed controller seed.
+
+Every test runs under a 120 s watchdog (POSIX SIGALRM) like the async
+service suite: a deadlocked gather/poll fails fast instead of hanging CI.
+"""
+
+import hashlib
+import json
+import signal
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.controller import Controller, EvalDB, EvalRecord
+from repro.core.costmodel import SINGLE_POD
+from repro.core.evaluators import AnalyticEvaluator
+from repro.core.knobs import clean_space
+from repro.core.replication import (AdaptiveRacer, RepeatStats,
+                                    ReplicatingService, ReplicationPolicy,
+                                    aggregate_repeats)
+from repro.core.service import (CallableServiceAdapter, EvalRequest,
+                                EvalResult, EvalTicket, FidelityRouter,
+                                ImmediateEvaluationService,
+                                WorkerPoolEvaluationService, fold_seed)
+from repro.core.strategy import BOConfig, make_strategy
+from repro.models.config import SHAPES_BY_NAME
+
+WATCHDOG_S = 120
+
+
+@pytest.fixture(autouse=True)
+def _watchdog():
+    if not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _fire(signum, frame):
+        raise TimeoutError(f"replication test exceeded {WATCHDOG_S}s "
+                           "(deadlocked gather/poll?)")
+
+    old = signal.signal(signal.SIGALRM, _fire)
+    signal.alarm(WATCHDOG_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+class SeededFn:
+    """Request-aware backend: value is a pure function of (config, seed),
+    so bit-identity across services is checkable without jax."""
+
+    wants_request = True
+
+    def __init__(self):
+        self.calls = 0
+
+    def __call__(self, cfg, request=None):
+        self.calls += 1
+        seed = request.seed if request is not None else None
+        h = hashlib.blake2s(
+            f"{sorted(cfg.items())}|{seed}".encode()).digest()[:8]
+        noise = 1.0 + (int.from_bytes(h, "little") % 10007) / 1e5
+        return (cfg["x"] - 0.3) ** 2 * noise + 0.1
+
+
+def _cfgs(n):
+    return [{"x": 0.1 + 0.07 * i} for i in range(n)]
+
+
+def _analytic(sigma=0.15):
+    cfg = get_config("yi-6b")
+    cell = SHAPES_BY_NAME["train_4k"]
+    space, _, _ = clean_space(cfg, cell, SINGLE_POD)
+    return AnalyticEvaluator(cfg, cell, noise_sigma=sigma), space
+
+
+# ---------------------------------------------------------------------------
+# seed propagation through every service path (satellite regression)
+# ---------------------------------------------------------------------------
+
+class TestSeedPropagation:
+    def test_callable_adapter_forwards_seed(self):
+        # regression: the adapter used to drop EvalRequest.seed on the
+        # way to the backend
+        svc = CallableServiceAdapter(SeededFn())
+        c = {"x": 0.4}
+        (a,) = svc.gather(svc.submit([EvalRequest(c, seed=11)]))
+        (b,) = svc.gather(svc.submit([EvalRequest(c, seed=11)]))
+        (d,) = svc.gather(svc.submit([EvalRequest(c, seed=12)]))
+        assert a.value == b.value
+        assert a.value != d.value
+
+    def test_fidelity_router_forwards_seed(self):
+        fn = SeededFn()
+        router = FidelityRouter(
+            {"screen": ImmediateEvaluationService({"screen": fn})})
+        c = {"x": 0.4}
+        (via_router,) = router.gather(router.submit(
+            [EvalRequest(c, fidelity="screen", seed=11)]))
+        direct_svc = ImmediateEvaluationService({"screen": SeededFn()})
+        (direct,) = direct_svc.gather(direct_svc.submit(
+            [EvalRequest(c, fidelity="screen", seed=11)]))
+        assert via_router.value == direct.value
+        router.close()
+
+    def test_analytic_seeded_draw_position_independent(self):
+        ev, space = _analytic()
+        c = space.default_config()
+        # seeded row value must not depend on batch position or on how
+        # many unseeded calls came before it
+        (v1,), _ = ev.evaluate_batch_detailed([c], seeds=[77])
+        ev(c)                                   # burn unseeded calls
+        ev(c)
+        vals, _ = ev.evaluate_batch_detailed([c, c, c],
+                                             seeds=[None, 77, None])
+        assert float(vals[1]) == float(v1)
+        # __call__ with the same seed is the same measurement
+        assert ev(c, seed=77) == float(v1)
+        # unseeded rows still draw fresh noise
+        assert float(vals[0]) != float(vals[2])
+
+    def test_seeded_and_unseeded_streams_disjoint(self):
+        ev, space = _analytic()
+        c = space.default_config()
+        seeded = {ev(c, seed=s) for s in range(8)}
+        fresh = {ev(c) for _ in range(8)}
+        assert len(seeded) == 8 and len(fresh) == 8
+        assert not (seeded & fresh)
+
+
+# ---------------------------------------------------------------------------
+# acceptance criterion: seed-replay bit-identity across built-in services
+# ---------------------------------------------------------------------------
+
+class TestServiceBitIdentity:
+    def test_immediate_vs_pool_bit_identical(self):
+        ev1, space = _analytic()
+        c = space.default_config()
+        reqs = [EvalRequest(c, seed=fold_seed(99, i)) for i in range(6)]
+        imm = ImmediateEvaluationService(ev1)
+        res_imm = imm.gather(imm.submit(reqs))
+        ev2, _ = _analytic()
+        with WorkerPoolEvaluationService(ev2, max_workers=4) as pool:
+            # streamed out of order by 4 workers — gather restores ticket
+            # order, and the seeds pin every draw
+            res_pool = pool.gather(pool.submit(reqs))
+        assert [r.value for r in res_imm] == [r.value for r in res_pool]
+
+    def test_distinct_seeds_distinct_draws(self):
+        ev, space = _analytic()
+        c = space.default_config()
+        svc = ImmediateEvaluationService(ev)
+        res = svc.gather(svc.submit(
+            [EvalRequest(c, seed=s) for s in range(10)]))
+        assert len({r.value for r in res}) == 10
+
+
+# ---------------------------------------------------------------------------
+# the ReplicatingService wrapper
+# ---------------------------------------------------------------------------
+
+class TestReplicatingService:
+    def test_fans_out_and_aggregates(self):
+        ev, space = _analytic()
+        c = space.default_config()
+        svc = ReplicatingService(ImmediateEvaluationService(ev),
+                                 n_repeats=4, seed=3)
+        (r,) = svc.gather(svc.submit([EvalRequest(c, seed=55)]))
+        assert r.ok and r.repeats == 4 and r.failures == 0
+        assert svc.measurements == 4 and ev.calls == 4
+        # the aggregate IS the pooled stats of the four seeded draws
+        ev2, _ = _analytic()
+        vals = [ev2(c, seed=fold_seed(55, i)) for i in range(4)]
+        st = RepeatStats.from_values(vals)
+        assert r.value == pytest.approx(st.mean, rel=0, abs=1e-15)
+        assert r.variance == pytest.approx(st.mean_var, rel=0, abs=1e-18)
+
+    def test_aggregate_invariant_to_inner_service(self):
+        ev1, space = _analytic()
+        c = space.default_config()
+        reqs = [EvalRequest(c, seed=s) for s in (1, 2, 3)]
+        s_imm = ReplicatingService(ImmediateEvaluationService(ev1),
+                                   n_repeats=5, seed=0)
+        res_imm = s_imm.gather(s_imm.submit(reqs))
+        ev2, _ = _analytic()
+        pool = WorkerPoolEvaluationService(ev2, max_workers=4)
+        s_pool = ReplicatingService(pool, n_repeats=5, seed=0)
+        res_pool = s_pool.gather(s_pool.submit(reqs))
+        pool.close()
+        # aggregation happens in slot (seed) order, not completion order
+        assert [r.value for r in res_imm] == [r.value for r in res_pool]
+        assert [r.variance for r in res_imm] == \
+            [r.variance for r in res_pool]
+
+    def test_request_n_repeats_override(self):
+        ev, space = _analytic()
+        c = space.default_config()
+        svc = ReplicatingService(ImmediateEvaluationService(ev),
+                                 n_repeats=3, seed=0)
+        res = svc.gather(svc.submit([EvalRequest(c, seed=1),
+                                     EvalRequest(c, seed=2, n_repeats=7)]))
+        assert res[0].repeats == 3 and res[1].repeats == 7
+        assert svc.measurements == 10
+
+    def test_unseeded_requests_replay_on_fresh_wrapper(self):
+        # without a request seed, the wrapper derives one from its own
+        # seed and the ticket uid — a fresh stack replays bit for bit
+        def run():
+            ev, space = _analytic()
+            svc = ReplicatingService(ImmediateEvaluationService(ev),
+                                     n_repeats=3, seed=12)
+            return svc.gather(svc.submit(
+                [EvalRequest(space.default_config())]))[0]
+        a, b = run(), run()
+        assert a.value == b.value and a.variance == b.variance
+
+    def test_poll_streams_aggregates(self):
+        ev, space = _analytic()
+        svc = ReplicatingService(ImmediateEvaluationService(ev),
+                                 n_repeats=2, seed=0)
+        tickets = svc.submit([EvalRequest(space.default_config(), seed=s)
+                              for s in range(3)])
+        res = svc.poll()
+        assert len(res) == 3 and all(r.repeats == 2 for r in res)
+        assert svc.drain() == []
+
+
+# ---------------------------------------------------------------------------
+# aggregation semantics (unit level; property tests in test_repeat_props)
+# ---------------------------------------------------------------------------
+
+def _res(uid, value, ok=True):
+    t = EvalTicket(uid, EvalRequest({"x": 0.5}))
+    if ok:
+        return EvalResult(t, value, wall_s=1.0)
+    return EvalResult(t, float("nan"), "failed", False, None, "boom",
+                      1.0, RuntimeError("boom"))
+
+
+class TestAggregation:
+    def test_failed_repeat_widens_variance_not_mean(self):
+        t = EvalTicket(0, EvalRequest({"x": 0.5}))
+        clean = aggregate_repeats(t, [_res(1, 1.0), _res(2, 2.0),
+                                      _res(3, 3.0)])
+        dirty = aggregate_repeats(t, [_res(1, 1.0), _res(2, 2.0),
+                                      _res(3, 3.0), _res(4, 0.0, ok=False)])
+        assert dirty.value == clean.value            # mean untouched
+        assert dirty.variance > clean.variance       # trust shrinks
+        assert dirty.repeats == 3 and dirty.failures == 1
+        assert dirty.variance == pytest.approx(clean.variance * 4 / 3)
+        assert dirty.wall_s == pytest.approx(4.0)    # failed runs cost too
+
+    def test_all_failed_aggregates_to_failed(self):
+        t = EvalTicket(0, EvalRequest({"x": 0.5}))
+        r = aggregate_repeats(t, [_res(1, 0, ok=False),
+                                  _res(2, 0, ok=False)])
+        assert not r.ok and r.repeats == 0 and r.failures == 2
+        assert r.error == "boom" or "boom" in r.error
+
+    def test_single_repeat_has_no_variance_estimate(self):
+        t = EvalTicket(0, EvalRequest({"x": 0.5}))
+        r = aggregate_repeats(t, [_res(1, 2.5)])
+        assert r.value == 2.5 and r.variance == 0.0 and r.repeats == 1
+
+    def test_stats_roundtrip_through_result(self):
+        t = EvalTicket(0, EvalRequest({"x": 0.5}))
+        r = aggregate_repeats(t, [_res(1, 1.0), _res(2, 2.0), _res(3, 4.0),
+                                  _res(4, 0.0, ok=False)])
+        st = RepeatStats.from_result(r)
+        assert st.count == 3 and st.failures == 1
+        assert st.mean == r.value
+        assert st.mean_var == pytest.approx(r.variance)
+
+
+# ---------------------------------------------------------------------------
+# replayed run_async traces (fresh controller + fresh service each run)
+# ---------------------------------------------------------------------------
+
+def _bo(space, budget=10, seed=0):
+    return make_strategy("bo", space, budget=budget, seed=seed,
+                         cfg=BOConfig(n_init=6, n_iter=budget - 6,
+                                      fit_steps=25))
+
+
+class TestRunAsyncReplay:
+    def test_replay_identical_immediate(self):
+        def run():
+            ev, space = _analytic()
+            ctrl = Controller(ev, EvalDB(), tag="t", seed=7)
+            return ctrl.run_async(_bo(space)).values
+        assert run() == run()
+
+    def test_replay_identical_worker_pool(self):
+        def run():
+            ev, space = _analytic()
+            svc = WorkerPoolEvaluationService(ev, max_workers=1)
+            ctrl = Controller(svc, EvalDB(), tag="t", seed=7)
+            try:
+                return ctrl.run_async(_bo(space)).values
+            finally:
+                svc.close()
+        assert run() == run()
+
+    def test_replay_identical_fixed_k_replication(self):
+        def run():
+            ev, space = _analytic()
+            ctrl = Controller(ev, EvalDB(), tag="t", seed=7,
+                              replication=ReplicationPolicy(n_repeats=3))
+            tr = ctrl.run_async(_bo(space))
+            return tr.values, tr.variances, ev.calls
+        a, b = run(), run()
+        assert a == b
+        assert a[2] == 30                       # 10 probes × 3 repeats
+        assert all(v > 0 for v in a[1])         # variance channel filled
+
+    def test_replay_identical_adaptive(self):
+        def run():
+            ev, space = _analytic()
+            pol = ReplicationPolicy(n_repeats=2, adaptive=True,
+                                    max_repeats=6, z=1.0)
+            ctrl = Controller(ev, EvalDB(), tag="t", seed=7,
+                              replication=pol)
+            tr = ctrl.run_async(_bo(space))
+            return tr.values, ev.calls, \
+                [r.repeats for r in ctrl.db.records]
+        a, b = run(), run()
+        assert a == b
+        assert len(a[0]) == 10
+        assert a[1] >= 20                       # at least 2 repeats each
+
+    def test_unseeded_controller_trace_unchanged(self):
+        # the pre-replication path: no controller seed, no policy — the
+        # request stream carries seed=None and traces match run() exactly
+        ev1, space = _analytic(sigma=0.025)
+        sync = Controller(ev1, EvalDB(), tag="t").run(_bo(space))
+        ev2, _ = _analytic(sigma=0.025)
+        over = Controller(ev2, EvalDB(), tag="t").run_async(_bo(space))
+        assert sync.values == over.values
+
+
+# ---------------------------------------------------------------------------
+# EvalDB round-trip for the replication fields
+# ---------------------------------------------------------------------------
+
+class TestEvalDB:
+    def test_repeats_variance_roundtrip(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        db = EvalDB(str(p))
+        db.append(EvalRecord({"x": 0.5}, 1.25, 0.1, "bo",
+                             repeats=4, variance=0.02))
+        db2 = EvalDB(str(p))
+        (r,) = db2.records
+        assert r.repeats == 4 and r.variance == 0.02
+
+    def test_legacy_lines_load_with_defaults(self, tmp_path):
+        p = tmp_path / "evals.jsonl"
+        p.write_text(json.dumps({"config": {"x": 0.5}, "value": 1.0,
+                                 "wall_s": 0.1, "tag": "bo"}) + "\n")
+        (r,) = EvalDB(str(p)).records
+        assert r.repeats == 1 and r.variance == 0.0
+
+    def test_single_measurement_line_stays_legacy_shaped(self, tmp_path):
+        # repeats=1 / variance=0 writes no new keys: existing tooling
+        # sees byte-stable lines for non-replicated runs
+        p = tmp_path / "evals.jsonl"
+        db = EvalDB(str(p))
+        db.append(EvalRecord({"x": 0.5}, 1.0, 0.1, "bo"))
+        d = json.loads(p.read_text())
+        assert "repeats" not in d and "variance" not in d
+
+
+# ---------------------------------------------------------------------------
+# the adaptive racer in isolation
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveRacer:
+    def test_settled_probe_released_immediately(self):
+        ev, space = _analytic()
+        svc = ReplicatingService(ImmediateEvaluationService(ev),
+                                 n_repeats=2, seed=0)
+        racer = AdaptiveRacer(ReplicationPolicy(adaptive=True,
+                                                max_repeats=6, z=1.0), svc)
+        racer.incumbent = -1e9          # CI can't straddle: far incumbent
+        c = space.default_config()
+        (t,) = svc.submit([EvalRequest(c, seed=5)])
+        (r,) = svc.gather([t])
+        out = racer.offer(t.uid, r, c, c)
+        assert out is not None and out[0].value == r.value
+        assert racer.busy == 0
+
+    def test_straddling_probe_re_measured(self):
+        ev, space = _analytic()
+        svc = ReplicatingService(ImmediateEvaluationService(ev),
+                                 n_repeats=2, seed=0)
+        racer = AdaptiveRacer(ReplicationPolicy(adaptive=True,
+                                                max_repeats=8, increment=2,
+                                                z=3.0), svc)
+        c = space.default_config()
+        (t,) = svc.submit([EvalRequest(c, seed=5)])
+        (r,) = svc.gather([t])
+        racer.incumbent = r.value       # dead straddle: must re-measure
+        held = racer.offer(t.uid, r, c, c)
+        assert held is None and racer.busy == 1
+        # the follow-up is a real submission through the service
+        follow = svc.drain()
+        assert len(follow) == 1 and follow[0].repeats == 2
+        out = racer.absorb(follow[0])
+        # merged stats: either settled (released) or racing again — but
+        # measured count must grow and never exceed max_repeats
+        if out is not None:
+            assert out[0].repeats == 4
+        else:
+            assert racer.busy == 1
