@@ -1,0 +1,176 @@
+"""Tuning-as-a-service throughput + cross-session cache effectiveness.
+
+    PYTHONPATH=src python -m benchmarks.perf_tuning_service [--tiny]
+
+Scenario (BestConfig's shared-deployment payoff, measured): one in-process
+:class:`~repro.service.server.TuningServer` hosts two analytic workloads;
+8 synthetic clients (threads) each create a session and have the server
+drive it to the same per-session budget.  Clients sharing a workload use
+the same recipe (strategy, seed) — the "recommended run" a service hands
+every user of a popular workload — so their probe streams coincide and
+the cross-session cache turns 8 runs' worth of traffic into 2 runs'
+worth of evaluations.
+
+Headline gates (asserted, ``--tiny`` included — the CI smoke):
+
+* cross-session cache hit rate >= 40 % over all requests;
+* total evaluator calls STRICTLY fewer than 8 independent local
+  ``Controller.run_async`` runs at equal per-session budget would make
+  (measured against a real local run, not assumed);
+* a single server-side session's trace is bit-identical to the local
+  ``run_async`` with the same seed (values, configs and running best) —
+  shared cached probes are indistinguishable from private evaluations.
+
+Also reported: sessions/sec across the concurrent clients and the
+daemon's own stats snapshot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+
+from benchmarks.common import save
+from repro.core.controller import Controller, EvalDB
+from repro.core.service import ImmediateEvaluationService
+from repro.core.strategy import BOConfig, make_strategy
+from repro.service import TuningServer, default_catalog
+
+WORKLOADS = ("yi-6b:train_4k", "qwen1.5-4b:train_4k")
+N_CLIENTS = 8
+HIT_RATE_GATE = 0.40
+
+
+def _bo_cfg(tiny: bool) -> dict:
+    return ({"n_init": 3, "n_iter": 3, "fit_steps": 10}
+            if tiny else {"n_init": 6, "n_iter": 10, "fit_steps": 40})
+
+
+def _budget(tiny: bool) -> int:
+    return 6 if tiny else 16
+
+
+def _local_run(workload: str, budget: int, seed: int, cfg: dict):
+    """One independent client tuning alone: the baseline each of the 8
+    concurrent clients would pay without the shared daemon."""
+    spec = default_catalog()[workload]
+    space, _ = spec.materialize()
+    backend = spec.build()[1]            # fresh evaluator, fresh counter
+    strat = make_strategy("bo", space, budget=budget, seed=seed,
+                          cfg=BOConfig(**cfg))
+    ctrl = Controller(ImmediateEvaluationService(backend), db=EvalDB(),
+                      tag="bo", workload=workload, seed=seed)
+    trace = ctrl.run_async(strat, budget=budget, max_in_flight=1,
+                           min_ask=1)
+    return trace, backend.calls
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny budgets, same gates")
+    args = ap.parse_args(argv)
+    tiny = args.tiny
+    budget, cfg, seed = _budget(tiny), _bo_cfg(tiny), 5
+
+    # ---- baseline: one independent local run per workload ----------------
+    local = {}
+    t0 = time.monotonic()
+    for wl in WORKLOADS:
+        local[wl] = _local_run(wl, budget, seed, cfg)
+    local_wall = time.monotonic() - t0
+    calls_per_session = {wl: calls for wl, (_, calls) in local.items()}
+    assert all(c == budget for c in calls_per_session.values()), \
+        calls_per_session
+    independent_calls = N_CLIENTS * budget     # 8 clients tuning alone
+
+    # ---- the shared daemon: 8 concurrent clients, 2 workloads ------------
+    srv = TuningServer({wl: default_catalog()[wl] for wl in WORKLOADS},
+                       max_workers=4)
+    sessions, errors = [], []
+    lock = threading.Lock()
+
+    def client(i: int):
+        wl = WORKLOADS[i % len(WORKLOADS)]
+        try:
+            s = srv.create_session(wl, budget=budget, seed=seed,
+                                   strategy_kwargs={"cfg": cfg})
+            with lock:
+                sessions.append(s)
+            s.run()
+        except Exception as e:               # pragma: no cover
+            errors.append(e)
+
+    t0 = time.monotonic()
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(N_CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    assert not errors, errors
+    assert len(sessions) == N_CLIENTS
+
+    cache = srv.pool.cache.snapshot()
+    server_calls = sum(srv.pool.inner.backends[wl].calls
+                       for wl in WORKLOADS)
+    sessions_per_sec = N_CLIENTS / wall
+
+    # ---- gates ------------------------------------------------------------
+    hit_rate = cache["hit_rate"]
+    assert hit_rate >= HIT_RATE_GATE, \
+        f"cache hit rate {hit_rate:.1%} < {HIT_RATE_GATE:.0%}"
+    assert server_calls < independent_calls, \
+        (f"shared pool made {server_calls} evaluator calls; "
+         f"{N_CLIENTS} independent runs make {independent_calls}")
+    # bit-identity: any one server session vs its workload's local run
+    for s in sessions:
+        lt, _ = local[s.workload]
+        st = s.strategy.trace
+        assert st.values == lt.values, \
+            f"{s.session_id}: server trace diverged from local run"
+        assert st.configs == lt.configs
+        assert st.best_values == lt.best_values
+    srv.close()
+
+    print(f"perf_tuning_service ({'tiny' if tiny else 'full'}): "
+          f"{N_CLIENTS} clients x budget {budget} on {len(WORKLOADS)} "
+          "workloads")
+    print(f"  independent baseline : {independent_calls} evaluator calls "
+          f"({local_wall:.2f}s for {len(WORKLOADS)} sessions)")
+    print(f"  shared daemon        : {server_calls} evaluator calls, "
+          f"{wall:.2f}s, {sessions_per_sec:.2f} sessions/s")
+    print(f"  cache                : {cache['hits']}/{cache['requests']} "
+          f"hits ({hit_rate:.1%}; {cache['hits_inflight']} in-flight), "
+          f"gate >= {HIT_RATE_GATE:.0%}  PASS")
+    print(f"  evaluator calls      : {server_calls} < {independent_calls}"
+          "  PASS")
+    print("  trace bit-identity   : all "
+          f"{N_CLIENTS} sessions == local run_async  PASS")
+
+    save("perf_tuning_service", {
+        "tiny": tiny, "clients": N_CLIENTS, "budget": budget,
+        "workloads": list(WORKLOADS),
+        "independent_calls": independent_calls,
+        "server_calls": server_calls,
+        "cache": cache,
+        "sessions_per_sec": sessions_per_sec,
+        "wall_s": wall, "local_wall_s": local_wall,
+        "gates": {"hit_rate": hit_rate,
+                  "hit_rate_gate": HIT_RATE_GATE,
+                  "calls_strictly_fewer": server_calls < independent_calls,
+                  "trace_bit_identical": True},
+    })
+    return 0
+
+
+def run(quick: bool = False):
+    """benchmarks.run entrypoint."""
+    main(["--tiny"] if quick else [])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

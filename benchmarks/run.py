@@ -15,6 +15,7 @@ One module per paper table/figure (DESIGN.md §7):
   perf_gp_ask device-resident q-EI selection + background GP refit
   perf_multi_device  sharded candidate scoring + kernel-autotune dogfood
   perf_replication  adaptive vs fixed-k replicated measurements budget
+  perf_tuning_service  concurrent sessions sharing one evaluation pool
 
 ``--json [PATH]`` writes per-benchmark wall-clock timings and statuses to
 an artifacts JSON (default artifacts/bench/run_timings.json) so the perf
@@ -33,8 +34,8 @@ from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig6_ranking, fig7_topk_efficiency,
                         fig8_two_fidelity, perf_async_service,
                         perf_batch_pipeline, perf_gp_ask, perf_multi_device,
-                        perf_replication, roofline_table, sec34_optimizers,
-                        table2_top16)
+                        perf_replication, perf_tuning_service, roofline_table,
+                        sec34_optimizers, table2_top16)
 
 MODULES = [
     ("fig2b_response_surface", fig2b_response_surface),
@@ -52,6 +53,7 @@ MODULES = [
     ("perf_gp_ask", perf_gp_ask),
     ("perf_multi_device", perf_multi_device),
     ("perf_replication", perf_replication),
+    ("perf_tuning_service", perf_tuning_service),
 ]
 
 

@@ -1,0 +1,95 @@
+"""Tuning as a service: two concurrent clients sharing one daemon.
+
+    PYTHONPATH=src python examples/tune_service.py [--budget 12] [--seed 5]
+
+Starts an in-process tuning daemon (the same `TuningServer` + HTTP wire
+that ``python -m repro.service`` runs standalone), then drives two
+concurrent client sessions against it over real HTTP:
+
+* both tune the SAME workload with the same recipe — the daemon's
+  cross-session probe cache dedupes their identical probes, so two
+  clients cost roughly one client's evaluator calls;
+* each still gets its own session: private namespace in the shared
+  evaluation log, private strategy state, private incumbent.
+
+Also shows the warm-restart loop: snapshot a session's strategy state
+over the wire, close it, and resume a new session from that state.
+"""
+
+import argparse
+import json
+import threading
+
+from repro.service import TuningClient, TuningServer, serve_background
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--workload", default="yi-6b:train_4k")
+    args = ap.parse_args()
+
+    bo_cfg = {"n_init": 4, "n_iter": 8, "fit_steps": 20}
+
+    tuning = TuningServer(max_workers=4)
+    httpd, _ = serve_background(tuning)        # ephemeral port
+    host, port = httpd.server_address[:2]
+    base = f"http://{host}:{port}"
+    print(f"daemon up on {base}")
+
+    client = TuningClient(base)
+    names = [w["name"] for w in client.workloads()]
+    print(f"hosted workloads: {names}")
+
+    # -- two concurrent sessions on the same workload ----------------------
+    results = {}
+
+    def tune(label):
+        with client.create_session(
+                args.workload, strategy="bo", budget=args.budget,
+                seed=args.seed, strategy_kwargs={"cfg": bo_cfg},
+                tag=label) as sess:
+            out = sess.run()                   # server-side drive
+            results[label] = out
+
+    threads = [threading.Thread(target=tune, args=(f"client-{i}",))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    for label, out in sorted(results.items()):
+        print(f"{label}: best {out['best_value']:.4f} after "
+              f"{out['n_evaluations']} evaluations")
+    stats = client.stats()
+    cache = stats["pool"]["cache"]
+    print(f"shared pool: {stats['pool']['backend_calls']} evaluator calls "
+          f"for both clients; cache {cache['hits']}/{cache['requests']} "
+          f"hits ({cache['hit_rate']:.0%})")
+
+    # -- warm restart: state over the wire ---------------------------------
+    warm_src = client.create_session(
+        args.workload, strategy="bo", budget=args.budget, seed=args.seed,
+        strategy_kwargs={"cfg": bo_cfg}, tag="warm-src")
+    warm_src.run()
+    state = json.loads(json.dumps(warm_src.state()))   # wire round-trip
+    warm_src.close()
+
+    resumed = client.create_session(
+        args.workload, strategy="bo", budget=args.budget + 6,
+        seed=args.seed, strategy_kwargs={"cfg": bo_cfg},
+        state=state, tag="warm-resume")
+    out = resumed.run()
+    print(f"warm restart: resumed with {state['evals_done']} post-init "
+          f"evaluations banked, best {out['best_value']:.4f} with "
+          f"{out['n_evaluations']} total on record")
+    resumed.close()
+
+    httpd.shutdown()
+    tuning.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+try:                      # POSIX advisory file lock for cross-process writers
+    import fcntl
+except ImportError:       # pragma: no cover - non-POSIX hosts
+    fcntl = None
+
 from repro.core.replication import AdaptiveRacer, ReplicationPolicy, \
     ReplicatingService
 from repro.core.service import (DEFAULT_FIDELITY, EvalRequest, EvalResult,
@@ -85,6 +90,9 @@ class EvalRecord:
     repeats: int = 1              # successful repeats pooled into `value`
     variance: float = 0.0         # variance of that pooled mean (0.0 =
                                   # single measurement / no estimate)
+    ns: str = ""                  # owning namespace (tuning-service session)
+                                  # behind a shared/sharded append log; ""
+                                  # = unnamespaced (every legacy record)
 
     @property
     def ok(self) -> bool:
@@ -97,12 +105,21 @@ class EvalDB:
     Writes are guarded by a lock and flushed per record: concurrent
     worker completions (the async controller streams appends from many
     threads' results) can neither interleave two half-written JSONL lines
-    nor leave a torn line behind a crash mid-batch.  The corrupt-line
-    skip on reload stays as the last line of defense.
+    nor leave a torn line behind a crash mid-batch.  Writers that do NOT
+    share this object (a second EvalDB on the same path — daemon workers,
+    other processes) are serialized by a POSIX advisory file lock per
+    append batch.  The corrupt-line skip on reload stays as the last
+    line of defense.
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None,
+                 shared_path: bool = False):
         self.path = Path(path) if path else None
+        # shared_path declares that OTHER writers (threads holding their
+        # own EvalDB, daemon workers, other processes) may append to this
+        # file concurrently: without advisory file locks that cannot be
+        # made safe, so the append fails loudly instead
+        self.shared_path = shared_path
         self.records: List[EvalRecord] = []
         self._lock = threading.Lock()
         if self.path and self.path.exists():
@@ -119,7 +136,8 @@ class EvalDB:
                         str(d.get("fidelity", "")),
                         str(d.get("status", "ok")),
                         int(d.get("repeats", 1)),
-                        float(d.get("variance", 0.0)))
+                        float(d.get("variance", 0.0)),
+                        str(d.get("ns", "")))
                 except (json.JSONDecodeError, KeyError, TypeError,
                         ValueError):
                     # a crashed writer leaves a truncated trailing line;
@@ -136,7 +154,7 @@ class EvalDB:
         return EvalRecord({k: _json_safe(v) for k, v in rec.config.items()},
                           float(_json_safe(rec.value)), rec.wall_s, rec.tag,
                           rec.workload, rec.fidelity, rec.status,
-                          int(rec.repeats), float(rec.variance))
+                          int(rec.repeats), float(rec.variance), rec.ns)
 
     @staticmethod
     def _line(rec: EvalRecord) -> str:
@@ -162,6 +180,8 @@ class EvalDB:
             d["repeats"] = rec.repeats
         if rec.variance:
             d["variance"] = rec.variance
+        if rec.ns:
+            d["ns"] = rec.ns
         return json.dumps(d) + "\n"
 
     def append(self, rec: EvalRecord):
@@ -170,7 +190,19 @@ class EvalDB:
     def append_batch(self, recs: Sequence[EvalRecord]):
         """Record a whole evaluation batch under the writer lock, flushing
         line by line — a batched experiment is the unit of work, and a
-        crash can truncate at most the line being written."""
+        crash can truncate at most the line being written.
+
+        The in-process ``threading.Lock`` only serializes writers sharing
+        THIS EvalDB object; two daemon workers (or two processes) each
+        holding their own EvalDB on the same path would interleave lines
+        through it.  Every append therefore additionally takes a POSIX
+        advisory lock (``flock``) on the open file — an exclusive lock
+        per batch, released when the file closes — so concurrent writers
+        anywhere on the host serialize whole batches instead of
+        interleaving half-written JSONL lines.  On hosts without
+        ``fcntl`` the append fails loudly rather than risking silent
+        corruption when a second writer is plausible (the tuning daemon
+        sets ``shared_path=True`` on its shard logs)."""
         recs = [self._sanitize(r) for r in recs]
         if not recs:
             return
@@ -178,7 +210,15 @@ class EvalDB:
             self.records.extend(recs)
             if self.path:
                 self.path.parent.mkdir(parents=True, exist_ok=True)
+                if fcntl is None and getattr(self, "shared_path", False):
+                    raise RuntimeError(
+                        f"EvalDB({self.path}): marked as shared between "
+                        "writers but this host has no fcntl advisory "
+                        "locks — concurrent appends could interleave "
+                        "corrupt JSONL lines")
                 with self.path.open("a") as f:
+                    if fcntl is not None:
+                        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
                     for r in recs:
                         f.write(self._line(r))
                         f.flush()
@@ -481,10 +521,15 @@ class Controller:
         svc = self.service
         # adaptive replication: completed probes whose credible interval
         # straddles the incumbent are held back and re-measured through
-        # the same service before being told (racing, not fixed-k)
+        # the same service before being told (racing, not fixed-k).  A
+        # strategy exposing a GP-implied measurement_variance lends the
+        # racer its posterior: 2-repeat probes then race on intervals
+        # pooled across configs, not 1-dof empirical variance draws
         racer = None
         if self.replication is not None and self.replication.adaptive:
-            racer = AdaptiveRacer(self.replication, svc)
+            prior = (getattr(strategy, "measurement_variance", None)
+                     if getattr(self.replication, "gp_prior", True) else None)
+            racer = AdaptiveRacer(self.replication, svc, noise_prior=prior)
         tell = self._teller(strategy)
         auto_cap = auto_width = None
         if max_in_flight is None:
@@ -646,6 +691,7 @@ class Controller:
             high: Union["Controller", Callable[[Config], float], None] = None,
             rounds: int = 4, screen: int = 16, promote: int = 2,
             screen_tag: str = "screen", promote_tag: str = "promote",
+            promote_z: float = 1.0,
             on_round: Optional[Callable[[int, Dict], None]] = None,
     ) -> Tuple[Config, float, List[Dict]]:
         """Two-fidelity successive halving: per round, ask ``screen``
@@ -655,6 +701,16 @@ class Controller:
         every candidate — promoted ones at their high-fidelity value, the
         rest at their screen value (a cheap multi-fidelity prior for the
         surrogate).
+
+        Under replicated measurements the screen values carry an
+        empirical variance of their pooled mean; promotion then ranks on
+        the *variance-widened* mean ``value + promote_z·sd`` instead of
+        the raw mean, so a lucky noisy draw cannot crowd a genuinely
+        good config out of the promotion slots.  Unreplicated screens
+        report zero variance, making the widened ranking bit-identical
+        to the plain one (``promote_z`` is inert then); the strategy is
+        always told the un-widened means, with their variances when it
+        accepts them.
 
         Fidelity is a *request field*: every screen request is stamped
         ``fidelity=screen_tag`` and every promotion ``fidelity=
@@ -680,6 +736,7 @@ class Controller:
             high_ctrl = Controller(high, self.db, promote_tag, self.prepare,
                                    self.workload)
         screen_ctrl = self.with_tag(screen_tag)
+        tell = self._teller(strategy)
         best_c: Optional[Config] = None
         best_v = float("inf")
         schedule: List[Dict] = []
@@ -689,17 +746,28 @@ class Controller:
             cands = strategy.ask(screen)
             if not cands:
                 break
-            screen_vals = screen_ctrl.evaluate_batch(cands,
-                                                     fidelity=screen_tag)
-            order = np.argsort(screen_vals, kind="stable")
+            screen_res = screen_ctrl._evaluate_sync(cands,
+                                                    fidelity=screen_tag)
+            screen_vals = [float(r.value) for r in screen_res]
+            screen_vars = [float(r.variance) for r in screen_res]
+            # promotion ranks on the variance-widened mean: a 2-repeat
+            # screen's ±sd uncertainty counts against it, so promotion
+            # slots go to configs whose screen value is good *beyond*
+            # its noise (zero-variance screens reduce to the raw mean)
+            widened = [v + promote_z * float(np.sqrt(max(s, 0.0)))
+                       for v, s in zip(screen_vals, screen_vars)]
+            order = np.argsort(widened, kind="stable")
             keep = [int(i) for i in order[:max(min(promote, len(cands)), 1)]]
             promoted = [cands[i] for i in keep]
-            high_vals = high_ctrl.evaluate_batch(promoted,
-                                                 fidelity=promote_tag)
-            vals = [float(v) for v in screen_vals]
-            for i, hv in zip(keep, high_vals):
-                vals[i] = float(hv)
-            strategy.tell(cands, vals)
+            high_res = high_ctrl._evaluate_sync(promoted,
+                                                fidelity=promote_tag)
+            high_vals = [float(r.value) for r in high_res]
+            vals = list(screen_vals)
+            variances = list(screen_vars)
+            for i, hr in zip(keep, high_res):
+                vals[i] = float(hr.value)
+                variances[i] = float(hr.variance)
+            tell(cands, vals, variances)
             for c, hv in zip(promoted, high_vals):
                 if float(hv) < best_v:
                     best_c, best_v = dict(c), float(hv)

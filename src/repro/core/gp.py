@@ -101,6 +101,29 @@ def init_params(d: int, lengthscale: float = 0.3, signal: float = 1.0,
     )
 
 
+def params_to_dict(params: GPParams) -> dict:
+    """JSON-serializable snapshot of the GP hyperparameters — the
+    first-class artifact warm restarts ship across processes
+    (:meth:`repro.core.strategy.BOStrategy.state_dict`).  Values are the
+    log-domain parameters exactly as fitted, so a roundtrip through
+    :func:`params_from_dict` is bit-exact at f32."""
+    return {
+        "log_lengthscale": [float(v)
+                            for v in np.asarray(params.log_lengthscale)],
+        "log_signal_var": float(params.log_signal_var),
+        "log_noise_var": float(params.log_noise_var),
+    }
+
+
+def params_from_dict(d: dict) -> GPParams:
+    """Inverse of :func:`params_to_dict`."""
+    return GPParams(
+        log_lengthscale=jnp.asarray(d["log_lengthscale"], jnp.float32),
+        log_signal_var=jnp.asarray(float(d["log_signal_var"]), jnp.float32),
+        log_noise_var=jnp.asarray(float(d["log_noise_var"]), jnp.float32),
+    )
+
+
 PAD_NOISE = 1e6   # pseudo-point noise: pads contribute ~nothing to the fit
 
 

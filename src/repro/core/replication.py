@@ -152,6 +152,10 @@ class ReplicationPolicy:
     increment: int = 1
     z: float = 1.0
     seed: int = 0
+    gp_prior: bool = True     # adaptive racing intervals borrow the
+                              # strategy's GP-implied measurement noise
+                              # (when the strategy exposes one) instead
+                              # of trusting a 2-repeat empirical variance
 
     @property
     def initial_repeats(self) -> int:
@@ -302,11 +306,26 @@ class AdaptiveRacer:
     re-measure only what the noise leaves ambiguous, up to
     ``max_repeats`` total runs per probe.  Single-threaded by design:
     ``run_async`` feeds it from the driver thread only.
+
+    ``noise_prior`` lets the credible interval come from the GP
+    posterior, not only the empirical repeat variance: a callable
+    ``config -> variance-of-one-measurement`` (raw objective units, or
+    ``None`` when no posterior exists yet — e.g.
+    :meth:`repro.core.strategy.BOStrategy.measurement_variance`).  A
+    2-repeat probe's own variance estimate has a single degree of
+    freedom; the GP's fitted noise scalar is pooled over every config
+    told so far, so the racer blends the two as a
+    ``prior_weight``-pseudo-repeat inverse-chi-square style shrinkage:
+    ``(ν·s² + w·σ²_GP) / (ν + w)`` with ``ν = k−1``.  Without a prior
+    (the default) the decision rule is exactly the empirical one.
     """
 
-    def __init__(self, policy: ReplicationPolicy, service):
+    def __init__(self, policy: ReplicationPolicy, service,
+                 noise_prior=None, prior_weight: float = 2.0):
         self.policy = policy
         self.service = service
+        self.noise_prior = noise_prior
+        self.prior_weight = float(prior_weight)
         self.incumbent = math.inf
         self._groups: Dict[int, dict] = {}       # outer uid -> group state
         self._follow: Dict[int, int] = {}        # follow-up uid -> outer uid
@@ -339,11 +358,30 @@ class AdaptiveRacer:
         g["measured"] += max(int(result.repeats), 0) + int(result.failures)
         return self._decide(uid, g)
 
+    def _mean_var(self, g: dict) -> float:
+        """Variance of the probe's pooled mean for the racing decision:
+        empirical by default; with a ``noise_prior``, the per-observation
+        variance is shrunk toward the GP's pooled noise estimate
+        (``prior_weight`` pseudo-repeats) before dividing by the repeat
+        count — small-k probes then race on an interval the whole trace
+        informs, not on a 1-dof variance draw."""
+        st: RepeatStats = g["stats"]
+        if self.noise_prior is None:
+            return st.mean_var
+        v0 = self.noise_prior(g["asked"])
+        if v0 is None or not v0 > 0.0:
+            return st.mean_var
+        nu = st.count - 1
+        pooled = ((nu * st.obs_var + self.prior_weight * v0)
+                  / (nu + self.prior_weight))
+        widen = (st.count + st.failures) / st.count
+        return (pooled / st.count) * widen
+
     def _decide(self, uid: int, g: dict):
         st: RepeatStats = g["stats"]
         room = self.policy.max_repeats - g["measured"]
         if st.count >= 2 and room > 0:
-            sd = math.sqrt(st.mean_var)
+            sd = math.sqrt(self._mean_var(g))
             lo, hi = st.mean - self.policy.z * sd, st.mean + self.policy.z * sd
             if sd > 0.0 and lo <= self.incumbent <= hi:
                 self._remeasure(uid, g, min(self.policy.increment, room))

@@ -208,6 +208,20 @@ def _config_key(cfg: Config) -> Tuple:
     return tuple(sorted(cfg.items(), key=lambda kv: kv[0]))
 
 
+def _json_cfg(cfg: Config) -> Config:
+    """JSON-safe copy of a config (numpy scalars to Python values)."""
+    out = {}
+    for k, v in cfg.items():
+        if isinstance(v, np.integer):
+            v = int(v)
+        elif isinstance(v, np.floating):
+            v = float(v)
+        elif isinstance(v, np.bool_):
+            v = bool(v)
+        out[k] = v
+    return out
+
+
 class _PendingSet:
     """Asked-but-untold probes keyed by canonical config tuple.
 
@@ -570,6 +584,7 @@ class BOStrategy(_StrategyBase):
         else:
             state = self._fit_gp(x, y, obs)
             self._params = state.params
+            self._posterior = (state, x, y)
             x_fit, y_fit = x, y
 
         # candidates: global LHS + Gaussian ball + per-knob incumbent
@@ -646,6 +661,120 @@ class BOStrategy(_StrategyBase):
             if self._match_pending(c):
                 self._evals_done += 1
             # else: injected observation — free information, no budget
+
+    # -- GP-implied measurement noise (the replication racer's prior) ---------
+
+    def measurement_variance(self, config: Config) -> Optional[float]:
+        """GP-implied variance of a *single* measurement at ``config``,
+        in raw objective units — the fitted observation-noise
+        hyperparameter, learned from every config's residuals at once.
+        This is the strength a 2-repeat probe borrows across configs:
+        its own empirical variance has one degree of freedom, while the
+        GP's noise scalar has the whole trace behind it
+        (:class:`repro.core.replication.AdaptiveRacer` pools the two).
+        Under ``log_objective`` the log-scale noise is mapped back
+        through the delta method at the posterior mean.  ``None`` before
+        the first fit (the racer then falls back to empirical-only)."""
+        post = self._posterior
+        if post is None:
+            return None
+        state = post[0]
+        nv = (float(np.exp(state.params.log_noise_var))
+              * float(state.y_std) ** 2)
+        if not self.cfg.log_objective:
+            return nv
+        u = np.asarray(self.space.to_unit(config),
+                       np.float32)[None]
+        mu, _ = gp.predict(state, u, self.cfg.kernel)
+        y_hat = float(np.exp(np.clip(float(mu[0]), -50.0, 50.0)))
+        return nv * y_hat * y_hat
+
+    # -- serializable hyperparameter state (warm session restarts) -----------
+
+    STATE_VERSION = 1
+
+    def state_dict(self) -> dict:
+        """First-class serializable GP state: hyperparameters
+        (lengthscales / signal / noise, log domain, f32-exact), dynamic
+        boundary state, and a trace snapshot — everything a fresh
+        :class:`BOStrategy` over the same base space needs to resume
+        this one (:meth:`load_state`).  Asked-but-untold probes are
+        deliberately NOT serialized: their results will never arrive in
+        the restarted process, so the restart re-asks them (in-flight
+        budget is released, told budget is kept).  The tuning service
+        snapshots sessions through this."""
+        return {
+            "version": self.STATE_VERSION,
+            "kind": "bo",
+            "kernel": self.cfg.kernel,
+            "params": (None if self._params is None
+                       else gp.params_to_dict(self._params)),
+            "bounds": {k.name: [float(k.lo), float(k.hi)]
+                       for k in self.space.knobs
+                       if k.kind in ("int", "float")},
+            "trace": {
+                "configs": [_json_cfg(c) for c in self.trace.configs],
+                "values": [float(v) for v in self.trace.values],
+                "variances": [float(v) for v in self.trace.variances],
+                "boundary_events": [[int(i), str(n)] for i, n
+                                    in self.trace.boundary_events],
+            },
+            "evals_done": int(self._evals_done),
+            "init_queue": [_json_cfg(c) for c in self._init_queue],
+            "n_init": int(self._n_init),
+            "pad_to": self._pad_to,
+            "space_version": int(self._space_version),
+        }
+
+    def load_state(self, sd: dict) -> None:
+        """Restore :meth:`state_dict` output into this (freshly built)
+        strategy: re-expands dynamic boundaries to their serialized
+        state, reinstates the fitted hyperparameters as the warm-start
+        carry, and replays the trace snapshot.  The strategy must have
+        been constructed over the same base space (same knob names) and
+        config (kernel) the snapshot came from."""
+        if sd.get("version") != self.STATE_VERSION:
+            raise ValueError(f"BOStrategy.load_state: unsupported state "
+                             f"version {sd.get('version')!r} "
+                             f"(this build speaks {self.STATE_VERSION})")
+        if sd.get("kernel", self.cfg.kernel) != self.cfg.kernel:
+            raise ValueError(
+                f"BOStrategy.load_state: state was fitted with kernel "
+                f"{sd['kernel']!r}, this strategy uses {self.cfg.kernel!r}")
+        bounds = sd.get("bounds", {})
+        unknown = set(bounds) - set(self.space.names)
+        if unknown:
+            raise ValueError("BOStrategy.load_state: state names knobs "
+                             f"this space lacks: {sorted(unknown)}")
+        space = self.space
+        for name, (lo, hi) in bounds.items():
+            k = space.knob(name)
+            if (float(k.lo), float(k.hi)) != (float(lo), float(hi)):
+                space = space.with_knob(replace(k, lo=float(lo),
+                                                hi=float(hi)))
+        self.space = space
+        self._params = (None if sd.get("params") is None
+                        else gp.params_from_dict(sd["params"]))
+        tr = sd.get("trace", {})
+        self.trace = Trace()
+        self.trace.extend(tr.get("configs", []), tr.get("values", []),
+                          tr.get("variances") or None)
+        self.trace.boundary_events = [(int(i), str(n)) for i, n
+                                      in tr.get("boundary_events", [])]
+        self._evals_done = int(sd.get("evals_done", 0))
+        self._init_queue = [dict(c) for c in sd.get("init_queue", [])]
+        self._n_init = int(sd.get("n_init", self._n_init))
+        self._pad_to = sd.get("pad_to")
+        self._space_version = int(sd.get("space_version", 0))
+        # in-flight state is process-local: pending probes are re-asked,
+        # the posterior/refit machinery restarts lazily on the next ask
+        self._pending = _PendingSet()
+        self._pending_init = _PendingSet()
+        self._posterior = None
+        self._refit_future = None
+        self._refit_snapshot = None
+        self._refit_len = 0
+        self._refit_space_version = self._space_version
 
 
 # ---------------------------------------------------------------------------

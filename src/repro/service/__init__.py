@@ -1,0 +1,24 @@
+"""Tuning-as-a-service: the Sapphire workflow as a persistent daemon.
+
+Layer map (each module's docstring has the details):
+
+* :mod:`repro.service.cache`    — cross-session probe cache
+* :mod:`repro.service.pool`     — shared worker pool + per-session views
+* :mod:`repro.service.shardlog` — sharded EvalDB + session namespaces
+* :mod:`repro.service.session`  — one Controller+strategy conversation
+* :mod:`repro.service.server`   — the daemon object (workloads, sessions)
+* :mod:`repro.service.wire`     — HTTP/JSON surface (stdlib http.server)
+* :mod:`repro.service.client`   — thin urllib client
+
+``python -m repro.service`` runs the daemon.
+"""
+
+from repro.service.cache import ProbeCache, probe_key
+from repro.service.client import RemoteSession, TuningClient, \
+    TuningServiceError
+from repro.service.pool import PoolView, SharedEvaluationPool, WorkloadPool
+from repro.service.server import TuningServer, WorkloadSpec, default_catalog
+from repro.service.session import SessionClosed, TuningSession
+from repro.service.shardlog import SessionDB, ShardedEvalLog
+from repro.service.wire import (make_wire_server, serve_background,
+                                space_from_json, space_to_json)

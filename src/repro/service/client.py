@@ -1,0 +1,143 @@
+"""Thin HTTP client for the tuning daemon (urllib only).
+
+:class:`TuningClient` speaks :mod:`repro.service.wire`'s JSON surface;
+:class:`RemoteSession` mirrors the session verbs so remote code reads
+like local ask/tell::
+
+    client = TuningClient("http://127.0.0.1:8421")
+    sess = client.create_session("yi-6b:train_4k", budget=16, seed=3)
+    for _ in range(4):
+        configs = sess.ask()
+        sess.tell(configs, [my_benchmark(c) for c in configs])
+    best_cfg, best_val = sess.best()
+
+or hands the whole drive to the server (the shared-pool path that
+cache-shares probes with every other user of the workload)::
+
+    result = sess.run()          # blocks; returns best + full trace
+
+Errors come back as :class:`TuningServiceError` carrying the HTTP
+status and the server's message.
+"""
+
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.request
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.space import Space
+from repro.service.wire import space_from_json
+
+
+class TuningServiceError(RuntimeError):
+    def __init__(self, status: int, message: str):
+        super().__init__(f"[{status}] {message}")
+        self.status = status
+        self.message = message
+
+
+class TuningClient:
+    def __init__(self, base_url: str, timeout: float = 600.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    def _call(self, method: str, path: str,
+              payload: Optional[dict] = None) -> dict:
+        data = None
+        headers = {"Accept": "application/json"}
+        if method == "POST":
+            data = json.dumps(payload or {}).encode()
+            headers["Content-Type"] = "application/json"
+        req = urllib.request.Request(self.base_url + path, data=data,
+                                     headers=headers, method=method)
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return json.loads(resp.read() or b"{}")
+        except urllib.error.HTTPError as e:
+            try:
+                msg = json.loads(e.read() or b"{}").get("error", str(e))
+            except json.JSONDecodeError:
+                msg = str(e)
+            raise TuningServiceError(e.code, msg) from None
+
+    # -- daemon-level --------------------------------------------------------
+
+    def health(self) -> dict:
+        return self._call("GET", "/v1/health")
+
+    def workloads(self) -> List[dict]:
+        return self._call("GET", "/v1/workloads")["workloads"]
+
+    def stats(self) -> dict:
+        return self._call("GET", "/v1/stats")
+
+    def sessions(self) -> List[dict]:
+        return self._call("GET", "/v1/sessions")["sessions"]
+
+    def create_session(self, workload: str, **kwargs) -> "RemoteSession":
+        out = self._call("POST", "/v1/sessions",
+                         {"workload": workload, **kwargs})
+        return RemoteSession(self, out["session"], out["workload"],
+                             space_from_json(out["space"]))
+
+
+class RemoteSession:
+    """Client-side handle; the strategy state lives on the server."""
+
+    def __init__(self, client: TuningClient, session_id: str,
+                 workload: str, space: Space):
+        self.client = client
+        self.session_id = session_id
+        self.workload = workload
+        self.space = space          # decoded: validate configs locally
+
+    def _call(self, method: str, verb: str,
+              payload: Optional[dict] = None) -> dict:
+        return self.client._call(
+            method, f"/v1/sessions/{self.session_id}/{verb}", payload)
+
+    def ask(self, n: Optional[int] = None) -> List[Dict]:
+        payload = {} if n is None else {"n": n}
+        return self._call("POST", "ask", payload)["configs"]
+
+    def tell(self, configs: Sequence[Dict], values: Sequence[float],
+             variances: Optional[Sequence[float]] = None) -> int:
+        payload = {"configs": list(configs),
+                   "values": [float(v) for v in values]}
+        if variances is not None:
+            payload["variances"] = [float(v) for v in variances]
+        return self._call("POST", "tell", payload)["told"]
+
+    def run(self, budget: Optional[int] = None,
+            batch_size: Optional[int] = None,
+            fidelity: Optional[str] = None) -> dict:
+        payload = {k: v for k, v in (("budget", budget),
+                                     ("batch_size", batch_size),
+                                     ("fidelity", fidelity))
+                   if v is not None}
+        return self._call("POST", "run", payload)
+
+    def best(self) -> Tuple[Dict, float]:
+        out = self._call("GET", "best")
+        return out["config"], out["value"]
+
+    def history(self, limit: Optional[int] = None) -> List[dict]:
+        verb = "history" if limit is None else f"history?limit={limit}"
+        return self._call("GET", verb)["records"]
+
+    def state(self) -> dict:
+        return self._call("GET", "state")["state"]
+
+    def close(self) -> None:
+        self._call("POST", "close")
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        try:
+            self.close()
+        except TuningServiceError:
+            pass                    # already closed server-side

@@ -1,0 +1,213 @@
+"""The process-wide evaluation pool every tuning session shares.
+
+The dCache Sapphire deployment splits an always-on driver from background
+benchmark workers; here the split is :class:`SharedEvaluationPool` (one
+per daemon) fanning requests from any number of per-session
+:class:`PoolView` facades into one
+:class:`~repro.core.service.WorkerPoolEvaluationService`.  Three layers:
+
+* :class:`WorkloadPool` — the worker pool, with the backend resolved per
+  request by its *workload* field (the core pool routes on fidelity only;
+  a daemon hosts many workloads behind one thread pool).
+* :class:`PoolView` — what a session's Controller sees: a full
+  :class:`~repro.core.service.EvaluationService` whose completions are
+  released in **submission order** (a reorder buffer over the pool's
+  out-of-order workers).  In-order release is what makes a server-side
+  session's trace bit-identical to a local run on an immediate service:
+  same tell order, same GP posterior, same next ask.
+* :class:`SharedEvaluationPool` — the multiplexer: routes every view
+  submission through the cross-session :class:`~repro.service.cache.
+  ProbeCache` (completed hits answer inline, in-flight hits attach as
+  waiters, misses go to the workers) and re-tickets shared results onto
+  each waiting view's own request.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.service import (EvalRequest, EvalResult, EvalTicket,
+                                WorkerPoolEvaluationService, _failed,
+                                _result, _score_one, _ServiceBase)
+from repro.service.cache import ProbeCache, probe_key
+
+
+class WorkloadPool(WorkerPoolEvaluationService):
+    """Worker pool whose backend table is keyed by *workload*, not
+    fidelity: one daemon thread pool serves every hosted workload, and a
+    request for an unregistered workload completes as a failed result
+    (the service contract — never an exception, never an orphan)."""
+
+    def _work(self, ticket: EvalTicket):
+        t0 = time.monotonic()
+        try:
+            backend = self._workload_backend(ticket.request)
+            scored = _score_one(backend, ticket.request.config,
+                                ticket.request)
+        except Exception as e:
+            scored = _failed(e)
+        self._complete(_result(ticket, scored, time.monotonic() - t0))
+
+    def _workload_backend(self, request: EvalRequest):
+        if self._any is not None:
+            return self._any
+        try:
+            return self.backends[request.workload]
+        except KeyError:
+            raise KeyError(
+                f"no backend for workload {request.workload!r}; "
+                f"hosted: {tuple(sorted(self.backends))}") from None
+
+    def add_backend(self, workload: str, backend) -> None:
+        self.backends[workload] = backend
+
+
+class PoolView(_ServiceBase):
+    """A session's private window onto the shared pool.
+
+    ``submit`` hands the tickets to the pool; the pool delivers each
+    result back through :meth:`_deliver` (from a worker thread, from
+    another session's completion, or inline on a cache hit), re-ticketed
+    onto this view's own request.  With ``ordered=True`` (the default) a
+    result is *released* — made visible to poll/gather — only once every
+    earlier submission of this view has been released, so the session's
+    driver observes the completion order an immediate service would have
+    produced, regardless of worker scheduling or which session's probe
+    satisfied the cache."""
+
+    def __init__(self, pool: "SharedEvaluationPool", ordered: bool = True):
+        super().__init__()
+        self._pool = pool
+        self.ordered = ordered
+        self._tickets: Dict[int, EvalTicket] = {}
+        self._held: Dict[int, EvalResult] = {}
+        self._next_release = 0
+
+    def submit(self, requests: Sequence[EvalRequest]) -> List[EvalTicket]:
+        tickets = self._issue(requests)
+        with self._cv:
+            for t in tickets:
+                self._tickets[t.uid] = t
+        self._pool.dispatch(self, tickets)
+        return tickets
+
+    def _deliver(self, uid: int, result: EvalResult) -> None:
+        # _cv is an RLock-backed Condition: _complete (and a sink that
+        # re-enters submit -> dispatch -> an inline cache hit back into
+        # _deliver) may re-acquire it on this thread.  The lock must span
+        # the release loop so two workers' deliveries cannot interleave
+        # their in-order releases.
+        with self._cv:
+            mine = self._tickets.pop(uid)
+            res = replace(result, ticket=mine)
+            if not self.ordered:
+                self._complete(res)
+                return
+            self._held[uid] = res
+            while self._next_release in self._held:
+                nxt = self._next_release
+                self._next_release += 1
+                self._complete(self._held.pop(nxt))
+
+    def close(self):                # the pool outlives its views
+        pass
+
+
+class SharedEvaluationPool:
+    """Multiplexes many :class:`PoolView` consumers over one
+    :class:`WorkloadPool` behind one :class:`ProbeCache`.
+
+    The pool owns the only sink on the inner service, so the inner pool
+    must not be polled directly while attached.  Completions are mapped
+    back to the consumers that asked: the cache-registered owner plus
+    every waiter that piled onto the same probe key while it ran."""
+
+    def __init__(self, backends=None, max_workers: int = 4,
+                 cache_capacity: int = 4096):
+        self.inner = WorkloadPool(dict(backends or {}),
+                                  max_workers=max_workers)
+        self.cache = ProbeCache(cache_capacity)
+        self._lock = threading.Lock()
+        # inner uid -> (key-or-None, owner view, owner view-uid)
+        self._meta: Dict[int, Tuple[Optional[Tuple], PoolView, int]] = {}
+        self.inner._sink = self._on_result
+        self._views = 0
+
+    # -- consumer side ------------------------------------------------------
+
+    def view(self, ordered: bool = True) -> PoolView:
+        with self._lock:
+            self._views += 1
+        return PoolView(self, ordered=ordered)
+
+    def add_backend(self, workload: str, backend) -> None:
+        self.inner.add_backend(workload, backend)
+
+    @property
+    def workloads(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.inner.backends))
+
+    def dispatch(self, view: PoolView,
+                 tickets: Sequence[EvalTicket]) -> None:
+        """Route one view's submissions: cache hits answer inline,
+        in-flight hits attach as waiters, everything else goes to the
+        workers under this pool's own tickets."""
+        hits: List[Tuple[int, EvalResult]] = []
+        to_submit: List[Tuple[EvalRequest, Optional[Tuple], int]] = []
+        for t in tickets:
+            key = probe_key(t.request)
+            verdict, res = self.cache.lookup(key, (view, t.uid))
+            if verdict == "hit":
+                hits.append((t.uid, res))
+            elif verdict == "wait":
+                pass                        # delivered at settle time
+            else:                           # miss | uncached: we evaluate
+                to_submit.append((t.request, key, t.uid))
+        if to_submit:
+            inner_tickets = self.inner._issue([r for r, _, _ in to_submit])
+            with self._lock:
+                for it, (_, key, vuid) in zip(inner_tickets, to_submit):
+                    self._meta[it.uid] = (key, view, vuid)
+            self.inner._dispatch(inner_tickets)
+        for vuid, res in hits:
+            view._deliver(vuid, res)
+
+    # -- inner-pool sink ----------------------------------------------------
+
+    def _on_result(self, result: EvalResult) -> None:
+        with self._lock:
+            meta = self._meta.pop(result.ticket.uid, None)
+        if meta is None:                    # racing close(); drop
+            return
+        key, owner, owner_uid = meta
+        deliveries: List[Tuple[PoolView, int]] = [(owner, owner_uid)]
+        if key is not None:
+            deliveries += self.cache.settle(key, result)
+        # outside every pool/cache lock: delivery may re-enter submit
+        for v, uid in deliveries:
+            v._deliver(uid, result)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        return {"cache": self.cache.snapshot(),
+                "workloads": list(self.workloads),
+                "backend_calls": sum(
+                    int(getattr(b, "calls", 0))
+                    for b in self.inner.backends.values()),
+                "inner_in_flight": self.inner.in_flight,
+                "max_workers": self.inner.max_workers,
+                "views": self._views}
+
+    def close(self):
+        self.inner.close()
+        self.inner._sink = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,222 @@
+"""The tuning daemon: many sessions, one evaluation pool, one log.
+
+:class:`TuningServer` is the Sapphire workflow as a persistent service
+(the ROADMAP's "millions of users" direction, BestConfig's shared
+deployment): clients create :class:`~repro.service.session.
+TuningSession`\\ s against named *workloads* from the server's registry,
+and every session's probes multiplex through one process-wide
+:class:`~repro.service.pool.SharedEvaluationPool` — so concurrent users
+of a popular workload share a worker pool, a probe cache, and (behind
+per-session namespaces) one sharded evaluation log.
+
+The server itself is transport-free; :mod:`repro.service.wire` puts the
+HTTP/JSON surface on top and ``python -m repro.service`` runs the
+daemon.  The default workload catalog exposes the repo's analytic
+test-cluster cells (smoke-sized model configs — CPU-fast, seeded, and
+exactly what the benchmarks drive); real deployments register their own
+``(space, backend)`` pairs via :meth:`TuningServer.register_workload`.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.controller import Controller
+from repro.core.replication import ReplicationPolicy
+from repro.core.space import Space
+from repro.core.strategy import (BOConfig, GAConfig, SAConfig, make_strategy,
+                                 strategy_names)
+from repro.service.pool import SharedEvaluationPool
+from repro.service.session import TuningSession
+from repro.service.shardlog import ShardedEvalLog
+
+
+@dataclass
+class WorkloadSpec:
+    """A hosted workload: a name plus a lazy ``(space, backend)`` build
+    (lazy so the default catalog's cost models only materialize for the
+    workloads clients actually tune)."""
+    name: str
+    build: Callable[[], Tuple[Space, object]]
+    description: str = ""
+    _cached: Optional[Tuple[Space, object]] = field(default=None,
+                                                    repr=False)
+
+    def materialize(self) -> Tuple[Space, object]:
+        if self._cached is None:
+            self._cached = self.build()
+        return self._cached
+
+
+def _analytic_spec(arch: str, shape: str,
+                   noise_sigma: float = 0.025) -> WorkloadSpec:
+    name = f"{arch}:{shape}"
+
+    def build():
+        from repro.configs import get_smoke_config
+        from repro.core.costmodel import SINGLE_POD
+        from repro.core.evaluators import AnalyticEvaluator
+        from repro.core.knobs import clean_space
+        from repro.models.config import SHAPES_BY_NAME
+        cfg = get_smoke_config(arch)
+        cell = SHAPES_BY_NAME[shape]
+        space, _, _ = clean_space(cfg, cell, SINGLE_POD)
+        ev = AnalyticEvaluator(cfg, cell, SINGLE_POD,
+                               noise_sigma=noise_sigma, history_cap=256)
+        return space, ev
+
+    return WorkloadSpec(name, build,
+                        f"analytic test cluster, {arch} @ {shape}")
+
+
+def default_catalog() -> Dict[str, WorkloadSpec]:
+    specs = [_analytic_spec(arch, shape)
+             for arch in ("yi-6b", "qwen1.5-4b", "xlstm-1.3b")
+             for shape in ("train_4k", "decode_32k")]
+    return {s.name: s for s in specs}
+
+
+_STRATEGY_CFG = {"bo": BOConfig, "sa": SAConfig, "ga": GAConfig}
+
+
+def _strategy_kwargs(name: str, kwargs: Optional[dict]) -> dict:
+    """Wire-side strategies arrive with a plain-dict ``cfg``; rebuild the
+    registry's dataclass so unknown fields fail loudly here, not deep in
+    the strategy."""
+    kwargs = dict(kwargs or {})
+    cfg = kwargs.get("cfg")
+    if isinstance(cfg, dict):
+        cls = _STRATEGY_CFG.get(name)
+        if cls is None:
+            raise ValueError(f"strategy {name!r} takes no cfg dict")
+        kwargs["cfg"] = cls(**cfg)
+    return kwargs
+
+
+class TuningServer:
+    """The daemon object: workload registry + session table + shared
+    pool + sharded log.  Thread-safe — the HTTP layer serves each request
+    on its own thread, and the in-process benchmark drives it from N
+    client threads directly."""
+
+    def __init__(self, workloads: Optional[Dict[str, WorkloadSpec]] = None,
+                 db_root: Optional[str] = None, n_shards: int = 4,
+                 max_workers: int = 4, cache_capacity: int = 4096):
+        self.registry: Dict[str, WorkloadSpec] = (
+            dict(workloads) if workloads is not None else default_catalog())
+        self.pool = SharedEvaluationPool(max_workers=max_workers,
+                                         cache_capacity=cache_capacity)
+        self.log = ShardedEvalLog(db_root, n_shards=n_shards)
+        self.sessions: Dict[str, TuningSession] = {}
+        self._lock = threading.RLock()
+        self._counter = 0
+        self.created_total = 0
+
+    # -- workloads -----------------------------------------------------------
+
+    def register_workload(self, name: str, space: Space, backend,
+                          description: str = "") -> None:
+        with self._lock:
+            self.registry[name] = WorkloadSpec(
+                name, lambda: (space, backend), description,
+                _cached=(space, backend))
+
+    def workloads(self) -> List[dict]:
+        with self._lock:
+            return [{"name": s.name, "description": s.description}
+                    for s in self.registry.values()]
+
+    def _resolve_workload(self, name: str) -> Tuple[Space, object]:
+        with self._lock:
+            try:
+                spec = self.registry[name]
+            except KeyError:
+                raise KeyError(
+                    f"unknown workload {name!r}; hosted: "
+                    f"{tuple(sorted(self.registry))}") from None
+            space, backend = spec.materialize()
+            if name not in self.pool.inner.backends:
+                self.pool.add_backend(name, backend)
+            return space, backend
+
+    # -- sessions ------------------------------------------------------------
+
+    def create_session(self, workload: str, strategy: str = "bo",
+                       budget: Optional[int] = None, seed: int = 0,
+                       batch_size: Optional[int] = None,
+                       strategy_kwargs: Optional[dict] = None,
+                       replication: Optional[dict] = None,
+                       deterministic: bool = True,
+                       tag: str = "",
+                       state: Optional[dict] = None) -> TuningSession:
+        if strategy not in strategy_names():
+            raise KeyError(f"unknown strategy {strategy!r}; "
+                           f"registered: {strategy_names()}")
+        space, _ = self._resolve_workload(workload)
+        kwargs = _strategy_kwargs(strategy, strategy_kwargs)
+        strat = make_strategy(strategy, space, budget=budget, seed=seed,
+                              batch_size=batch_size, **kwargs)
+        if state is not None:
+            load = getattr(strat, "load_state", None)
+            if load is None:
+                raise TypeError(f"strategy {strategy!r} cannot load_state")
+            load(state)
+        policy = None
+        if replication:
+            policy = ReplicationPolicy(**replication)
+        with self._lock:
+            self._counter += 1
+            self.created_total += 1
+            sid = f"s{self._counter:04d}"
+            view = self.pool.view(ordered=deterministic)
+            ctrl = Controller(view, db=self.log.namespace(sid),
+                              tag=tag or strategy, workload=workload,
+                              replication=policy, seed=seed)
+            sess = TuningSession(sid, workload, strategy, strat, ctrl,
+                                 deterministic=deterministic, budget=budget,
+                                 batch_size=batch_size)
+            self.sessions[sid] = sess
+            return sess
+
+    def session(self, session_id: str) -> TuningSession:
+        with self._lock:
+            try:
+                return self.sessions[session_id]
+            except KeyError:
+                raise KeyError(f"no session {session_id!r}") from None
+
+    def close_session(self, session_id: str) -> None:
+        with self._lock:
+            sess = self.session(session_id)
+            del self.sessions[session_id]
+        sess.close()
+
+    def list_sessions(self) -> List[dict]:
+        with self._lock:
+            return [s.describe() for s in self.sessions.values()]
+
+    # -- daemon-level introspection / lifecycle ------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            open_sessions = len(self.sessions)
+        return {"sessions_open": open_sessions,
+                "sessions_created": self.created_total,
+                "evaluations_logged": len(self.log),
+                "pool": self.pool.stats()}
+
+    def close(self):
+        with self._lock:
+            sessions = list(self.sessions.values())
+            self.sessions.clear()
+        for s in sessions:
+            s.close()
+        self.pool.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

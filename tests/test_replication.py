@@ -300,12 +300,18 @@ class TestRunAsyncReplay:
         assert run() == run()
 
     def test_replay_identical_worker_pool(self):
+        # barrier cadence (max_in_flight=min_ask=1): with overlap, how
+        # completions group into tell waves depends on thread timing, so
+        # replay bit-identity over a pool is only guaranteed when each
+        # ask waits out its probe (the tuning service's deterministic
+        # sessions rely on exactly this cadence)
         def run():
             ev, space = _analytic()
             svc = WorkerPoolEvaluationService(ev, max_workers=1)
             ctrl = Controller(svc, EvalDB(), tag="t", seed=7)
             try:
-                return ctrl.run_async(_bo(space)).values
+                return ctrl.run_async(_bo(space), max_in_flight=1,
+                                      min_ask=1).values
             finally:
                 svc.close()
         assert run() == run()

@@ -1,0 +1,737 @@
+"""Tuning-as-a-service: session isolation, the cross-session probe
+cache, the sharded namespaced log, the HTTP wire, and the satellite
+state-serialization / replication-prior / file-lock changes.
+
+Conventions follow ``test_service_async.py``: every test runs under a
+120 s SIGALRM watchdog so a deadlocked gather/poll (the failure mode of
+a multiplexed pool) fails fast instead of hanging CI.
+"""
+
+import json
+import signal
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.controller import Controller, EvalDB, EvalRecord
+from repro.core.replication import (AdaptiveRacer, RepeatStats,
+                                    ReplicationPolicy)
+from repro.core.service import (EvalRequest, EvalResult, EvalTicket,
+                                ImmediateEvaluationService, fold_seed)
+from repro.core.space import (Divides, Knob, Leq, ProductLeq, Space,
+                              SumLeq)
+from repro.core.strategy import BOConfig, BOStrategy, make_strategy
+from repro.service import (ProbeCache, SessionClosed, ShardedEvalLog,
+                           SharedEvaluationPool, TuningClient,
+                           TuningServer, TuningServiceError, WorkloadSpec,
+                           probe_key, serve_background)
+from repro.service.shardlog import shard_index
+from repro.service.wire import space_from_json, space_to_json
+
+WATCHDOG_S = 120
+
+
+@pytest.fixture(autouse=True)
+def _watchdog():
+    if not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _fire(signum, frame):
+        raise TimeoutError(f"tuning-service test exceeded {WATCHDOG_S}s "
+                           "(deadlocked pool/session?)")
+
+    old = signal.signal(signal.SIGALRM, _fire)
+    signal.alarm(WATCHDOG_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+# ---------------------------------------------------------------------------
+# synthetic seeded workload
+# ---------------------------------------------------------------------------
+
+class _BD:
+    feasible = True
+
+
+class SeededQuad:
+    """Seed-deterministic synthetic benchmark: the value depends only on
+    (config, seed) — the PR 7 contract the probe cache builds on.  Call
+    counting is lock-guarded (pool workers score concurrently)."""
+
+    accepts_seeds = True
+
+    def __init__(self, shift=0.0):
+        self.shift = shift
+        self.calls = 0
+        self._lock = threading.Lock()
+
+    def evaluate_batch_detailed(self, cfgs, seeds=None):
+        with self._lock:
+            self.calls += len(cfgs)
+        vals = []
+        for i, c in enumerate(cfgs):
+            s = None if seeds is None else seeds[i]
+            rng = np.random.default_rng(0 if s is None else s)
+            vals.append((c["x"] - 0.3) ** 2 + (c["y"] - 0.7) ** 2
+                        + self.shift + 0.01 * rng.standard_normal())
+        return vals, [_BD()] * len(cfgs)
+
+
+def _space():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+
+
+def _server(**kw):
+    kw.setdefault("max_workers", 4)
+    return TuningServer(
+        {"quad": WorkloadSpec("quad", lambda: (_space(), SeededQuad())),
+         "quad2": WorkloadSpec("quad2",
+                               lambda: (_space(), SeededQuad(shift=1.0)))},
+        **kw)
+
+
+BO_KW = {"cfg": {"n_init": 4, "n_iter": 8, "fit_steps": 15}}
+
+
+def _backend(server, workload):
+    return server.pool.inner.backends[workload]
+
+
+# ---------------------------------------------------------------------------
+# probe cache
+# ---------------------------------------------------------------------------
+
+class TestProbeCache:
+    def test_unseeded_requests_bypass(self):
+        assert probe_key(EvalRequest({"x": 1})) is None
+        cache = ProbeCache()
+        verdict, res = cache.lookup(None, "w")
+        assert (verdict, res) == ("uncached", None)
+        assert cache.stats["uncached"] == 1 and cache.hit_rate == 0.0
+
+    def test_key_identity(self):
+        a = EvalRequest({"x": 1, "y": 2.0}, "f", "wl", "tag-a", seed=7)
+        b = EvalRequest({"y": 2.0, "x": 1}, "f", "wl", "tag-b", seed=7)
+        assert probe_key(a) == probe_key(b)     # order/tag-insensitive
+        assert probe_key(a) != probe_key(
+            EvalRequest({"x": 1, "y": 2.0}, "f", "wl", seed=8))
+        assert probe_key(a) != probe_key(
+            EvalRequest({"x": 1, "y": 2.0}, "g", "wl", seed=7))
+        assert probe_key(a) != probe_key(
+            EvalRequest({"x": 1, "y": 2.0}, "f", "other", seed=7))
+        # numpy-typed configs key identically to plain ones
+        c = EvalRequest({"x": np.int64(1), "y": np.float64(2.0)},
+                        "f", "wl", seed=7)
+        assert probe_key(c) == probe_key(a)
+
+    def _result(self, req, value, status="ok"):
+        return EvalResult(EvalTicket(0, req), value, status=status,
+                          feasible=status == "ok")
+
+    def test_completed_hit_and_lru_eviction(self):
+        cache = ProbeCache(capacity=2)
+        reqs = [EvalRequest({"x": i}, seed=i) for i in range(3)]
+        keys = [probe_key(r) for r in reqs]
+        for k, r in zip(keys, reqs):
+            assert cache.lookup(k, "w")[0] == "miss"
+            cache.settle(k, self._result(r, 1.0))
+        # capacity 2: key 0 evicted, 1 and 2 live
+        assert cache.lookup(keys[0], "w")[0] == "miss"
+        assert cache.lookup(keys[1], "w")[0] == "hit"
+        assert cache.lookup(keys[2], "w")[0] == "hit"
+        assert cache.stats["evictions"] >= 1
+
+    def test_inflight_waiters_and_failed_not_stored(self):
+        cache = ProbeCache()
+        req = EvalRequest({"x": 1}, seed=3)
+        key = probe_key(req)
+        assert cache.lookup(key, "owner")[0] == "miss"
+        assert cache.lookup(key, "w1")[0] == "wait"
+        assert cache.lookup(key, "w2")[0] == "wait"
+        waiters = cache.settle(key, self._result(req, 0.0, status="failed"))
+        assert waiters == ["w1", "w2"]
+        # failed results are delivered but not cached: next lookup re-owns
+        assert cache.lookup(key, "owner")[0] == "miss"
+        ok = cache.settle(key, self._result(req, 2.5))
+        assert ok == []
+        verdict, res = cache.lookup(key, "w3")
+        assert verdict == "hit" and res.value == 2.5
+
+
+# ---------------------------------------------------------------------------
+# shared pool + ordered views
+# ---------------------------------------------------------------------------
+
+class TestSharedPool:
+    def test_view_releases_in_submission_order(self):
+        """Workers complete out of order (earlier uids sleep longer);
+        an ordered view must still release uid 0, 1, 2, ..."""
+        import time as _time
+
+        class Slow:
+            accepts_seeds = True
+
+            def evaluate_batch_detailed(self, cfgs, seeds=None):
+                _time.sleep(0.02 * float(cfgs[0]["d"]))
+                return [float(cfgs[0]["d"])], [_BD()]
+
+        pool = SharedEvaluationPool({"wl": Slow()}, max_workers=4)
+        view = pool.view(ordered=True)
+        n = 6
+        # delay decreases with index: last submitted completes first
+        tickets = view.submit([
+            EvalRequest({"d": n - i, "i": i}, workload="wl", seed=i)
+            for i in range(n)])
+        got = []
+        while len(got) < n:
+            got += view.poll(timeout=None)
+        assert [r.ticket.uid for r in got] == [t.uid for t in tickets]
+        assert [r.request.config["i"] for r in got] == list(range(n))
+        pool.close()
+
+    def test_cross_view_inflight_dedup(self):
+        """Two views racing the same seeded probe: one backend call,
+        both views get the measurement, re-ticketed per view."""
+        import time as _time
+
+        class SlowCounting(SeededQuad):
+            def evaluate_batch_detailed(self, cfgs, seeds=None):
+                _time.sleep(0.05)
+                return super().evaluate_batch_detailed(cfgs, seeds)
+
+        backend = SlowCounting()
+        pool = SharedEvaluationPool({"wl": backend}, max_workers=4)
+        v1, v2 = pool.view(), pool.view()
+        req = EvalRequest({"x": 0.2, "y": 0.9}, workload="wl", seed=11)
+        (t1,) = v1.submit([req])
+        (t2,) = v2.submit([req])
+        (r1,) = v1.gather([t1])
+        (r2,) = v2.gather([t2])
+        assert r1.value == r2.value and r1.ok and r2.ok
+        assert r1.ticket.uid == t1.uid and r2.ticket.uid == t2.uid
+        assert backend.calls == 1
+        assert pool.cache.stats["hits_inflight"] == 1
+        pool.close()
+
+    def test_unknown_workload_fails_result_not_exception(self):
+        pool = SharedEvaluationPool({"wl": SeededQuad()}, max_workers=2)
+        view = pool.view()
+        (t,) = view.submit([EvalRequest({"x": 0.1, "y": 0.1},
+                                        workload="nope", seed=1)])
+        (r,) = view.gather([t])
+        assert not r.ok and "no backend for workload" in r.error
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# session isolation + cross-session sharing (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+class TestSessionIsolation:
+    def test_shared_probes_bit_exact_disjoint_state(self):
+        with _server() as srv:
+            s1 = srv.create_session("quad", budget=8, seed=5,
+                                    strategy_kwargs=BO_KW)
+            s2 = srv.create_session("quad", budget=8, seed=5,
+                                    strategy_kwargs=BO_KW)
+            t1 = s1.run()
+            t2 = s2.run()
+            # bit-exact sharing: the cached probe IS the measurement
+            assert t1.values == t2.values
+            assert t1.configs == t2.configs
+            # disjoint strategy state and EvalDB namespaces
+            assert s1.strategy is not s2.strategy
+            assert s1.db.ns != s2.db.ns
+            recs1, recs2 = s1.db.records, s2.db.records
+            assert len(recs1) == len(recs2) == 8
+            assert {r.ns for r in recs1} == {s1.db.ns}
+            assert {r.ns for r in recs2} == {s2.db.ns}
+            # the second session re-evaluated nothing
+            assert _backend(srv, "quad").calls == 8
+            assert srv.pool.cache.stats["hits"] == 8
+
+    def test_server_trace_bit_identical_to_local_run(self):
+        """Acceptance: a single server-side session over the shared
+        worker pool produces the trace a local ``run_async`` on an
+        immediate service produces, same seed — same barrier cadence,
+        same seeds, same values, bit for bit."""
+        budget, seed = 10, 7
+        with _server() as srv:
+            sess = srv.create_session("quad", budget=budget, seed=seed,
+                                      strategy_kwargs=BO_KW)
+            server_trace = sess.run()
+        strat = make_strategy("bo", _space(), budget=budget, seed=seed,
+                              cfg=BOConfig(**BO_KW["cfg"]))
+        local = Controller(ImmediateEvaluationService(SeededQuad()),
+                           db=EvalDB(), tag="bo", workload="quad",
+                           seed=seed)
+        local_trace = local.run_async(strat, budget=budget,
+                                      max_in_flight=1, min_ask=1)
+        assert server_trace.values == local_trace.values
+        assert server_trace.configs == local_trace.configs
+        assert server_trace.best_values == local_trace.best_values
+
+    def test_threaded_stress_shared_workloads(self):
+        """8 concurrent clients, 2 workloads, 4 clients each sharing a
+        seed: every probe is evaluated once per workload, the cache
+        serves the rest, and no session's namespace leaks."""
+        budget = 6
+        kw = {"cfg": {"n_init": 3, "n_iter": 3, "fit_steps": 10}}
+        with _server(max_workers=4) as srv:
+            sessions, errors = [], []
+            lock = threading.Lock()
+
+            def client(workload):
+                try:
+                    s = srv.create_session(workload, budget=budget,
+                                           seed=3, strategy_kwargs=kw)
+                    with lock:
+                        sessions.append(s)
+                    s.run()
+                except Exception as e:          # pragma: no cover
+                    errors.append(e)
+
+            threads = [threading.Thread(
+                target=client, args=("quad" if i % 2 else "quad2",))
+                for i in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errors
+            assert len(sessions) == 8
+            namespaces = {s.db.ns for s in sessions}
+            assert len(namespaces) == 8
+            for s in sessions:
+                assert len(s.db.records) == budget
+                assert {r.ns for r in s.db.records} == {s.db.ns}
+            # one evaluation per distinct probe per workload
+            calls = (_backend(srv, "quad").calls
+                     + _backend(srv, "quad2").calls)
+            assert calls == 2 * budget
+            stats = srv.pool.cache.snapshot()
+            assert stats["hits"] == 8 * budget - 2 * budget
+            assert stats["hit_rate"] >= 0.4
+
+    def test_sharded_log_roundtrip_on_disk(self, tmp_path):
+        root = str(tmp_path / "log")
+        with _server(db_root=root, n_shards=3) as srv:
+            s1 = srv.create_session("quad", budget=5, seed=1,
+                                    strategy_kwargs=BO_KW)
+            s2 = srv.create_session("quad2", budget=5, seed=2,
+                                    strategy_kwargs=BO_KW)
+            s1.run()
+            s2.run()
+            ns1, ns2 = s1.db.ns, s2.db.ns
+        reloaded = ShardedEvalLog(root, n_shards=3)
+        assert set(reloaded.namespaces()) == {ns1, ns2}
+        assert reloaded.counts() == {ns1: 5, ns2: 5}
+        view = reloaded.namespace(ns1)
+        assert len(view) == 5
+        assert all(r.workload == "quad" for r in view.records)
+        cfgs, vals = view.pairs()
+        assert len(cfgs) == len(vals) == 5
+
+    def test_closed_session_rejects_everything(self):
+        with _server() as srv:
+            s = srv.create_session("quad", budget=4, seed=0,
+                                   strategy_kwargs=BO_KW)
+            sid = s.session_id
+            srv.close_session(sid)
+            with pytest.raises(SessionClosed):
+                s.ask()
+            with pytest.raises(KeyError):
+                srv.session(sid)
+
+
+# ---------------------------------------------------------------------------
+# sharded log unit behavior
+# ---------------------------------------------------------------------------
+
+class TestShardLog:
+    def test_stable_shard_routing(self):
+        assert shard_index("s0001", 4) == shard_index("s0001", 4)
+        log = ShardedEvalLog(None, n_shards=4)
+        db = log.namespace("abc")
+        assert db.shard is log.shards[shard_index("abc", 4)]
+        with pytest.raises(ValueError):
+            log.namespace("")
+
+    def test_namespace_filtering(self):
+        log = ShardedEvalLog(None, n_shards=1)     # force shard collision
+        a, b = log.namespace("a"), log.namespace("b")
+        a.append(EvalRecord({"x": 1}, 1.0, 0.0, "t"))
+        b.append_batch([EvalRecord({"x": 2}, 2.0, 0.0, "t")])
+        assert len(a) == 1 and len(b) == 1 and len(log) == 2
+        assert a.records[0].value == 1.0 and a.records[0].ns == "a"
+        assert b.records[0].value == 2.0 and b.records[0].ns == "b"
+
+
+# ---------------------------------------------------------------------------
+# EvalDB concurrent writers (advisory file lock)
+# ---------------------------------------------------------------------------
+
+class TestEvalDBFileLock:
+    def test_two_objects_one_path_no_torn_lines(self, tmp_path):
+        """Two EvalDB objects (distinct in-process locks!) hammering one
+        path: the flock serializes batches, so every reloaded line
+        parses and nothing interleaves."""
+        path = str(tmp_path / "shared.jsonl")
+        dbs = [EvalDB(path, shared_path=True) for _ in range(2)]
+        n, batch = 40, 5
+
+        def writer(db, tag):
+            for i in range(n // batch):
+                db.append_batch([
+                    EvalRecord({"k" * 30: i * batch + j}, float(j), 0.0,
+                               tag, "w" * 40)
+                    for j in range(batch)])
+
+        threads = [threading.Thread(target=writer, args=(db, f"t{i}"))
+                   for i, db in enumerate(dbs)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        lines = [ln for ln in open(path).read().splitlines() if ln.strip()]
+        assert len(lines) == 2 * n
+        for ln in lines:                 # every line is whole JSON
+            json.loads(ln)
+        reloaded = EvalDB(path)
+        assert len(reloaded) == 2 * n
+        assert {r.tag for r in reloaded.records} == {"t0", "t1"}
+
+    def test_shared_path_fails_loudly_without_fcntl(self, tmp_path,
+                                                    monkeypatch):
+        import repro.core.controller as ctl
+        db = EvalDB(str(tmp_path / "x.jsonl"), shared_path=True)
+        monkeypatch.setattr(ctl, "fcntl", None)
+        with pytest.raises(RuntimeError, match="advisory"):
+            db.append(EvalRecord({"a": 1}, 1.0, 0.0))
+        # unshared paths keep working (single-writer legacy contract)
+        solo = EvalDB(str(tmp_path / "y.jsonl"))
+        solo.append(EvalRecord({"a": 1}, 1.0, 0.0))
+        assert len(EvalDB(str(tmp_path / "y.jsonl"))) == 1
+
+
+# ---------------------------------------------------------------------------
+# HTTP wire
+# ---------------------------------------------------------------------------
+
+class TestWire:
+    @pytest.fixture()
+    def service(self):
+        srv = _server()
+        httpd, _ = serve_background(srv)
+        host, port = httpd.server_address[:2]
+        try:
+            yield TuningClient(f"http://{host}:{port}"), srv
+        finally:
+            httpd.shutdown()
+            srv.close()
+
+    def test_lifecycle_ask_tell_best_history_close(self, service):
+        client, srv = service
+        assert client.health()["ok"]
+        assert {w["name"] for w in client.workloads()} == {"quad", "quad2"}
+        sess = client.create_session("quad", strategy="random", budget=6,
+                                     seed=1)
+        assert [k.name for k in sess.space.knobs] == ["x", "y"]
+        cfgs = sess.ask(3)
+        assert len(cfgs) == 3 and all("x" in c for c in cfgs)
+        assert sess.tell(cfgs, [3.0, 1.0, 2.0],
+                         variances=[0.1, 0.1, 0.1]) == 3
+        cfg, val = sess.best()
+        assert val == 1.0 and cfg == cfgs[1]
+        recs = sess.history()
+        assert len(recs) == 3
+        assert all(r["fidelity"] == "client" for r in recs)
+        assert sess.history(limit=2)[-1]["value"] == 2.0
+        sess.close()
+        with pytest.raises(TuningServiceError) as ei:
+            sess.ask()
+        assert ei.value.status == 404            # closed = gone
+        assert client.stats()["sessions_open"] == 0
+
+    def test_server_side_run_and_state(self, service):
+        client, srv = service
+        sess = client.create_session("quad", budget=8, seed=4,
+                                     strategy_kwargs=BO_KW)
+        out = sess.run()
+        assert out["n_evaluations"] == 8
+        assert out["best_value"] == min(out["trace"]["values"])
+        assert len(out["trace"]["configs"]) == 8
+        state = sess.state()
+        assert state["kind"] == "bo" and state["version"] == 1
+        # warm restart: a new session resumes from the snapshot
+        warm = client.create_session("quad", budget=16, seed=9,
+                                     strategy_kwargs=BO_KW, state=state)
+        assert len(warm.ask(2)) == 2
+        # in-process equivalence: the wire adds serialization, nothing else
+        twin = srv.create_session("quad", budget=8, seed=4,
+                                  strategy_kwargs=BO_KW)
+        assert twin.run().values == out["trace"]["values"]
+
+    def test_error_codes(self, service):
+        client, _ = service
+        with pytest.raises(TuningServiceError) as ei:
+            client.create_session("no-such-workload")
+        assert ei.value.status == 404
+        with pytest.raises(TuningServiceError) as ei:
+            client.create_session("quad", strategy="zzz")
+        assert ei.value.status == 404 or ei.value.status == 400
+        with pytest.raises(TuningServiceError) as ei:
+            client._call("POST", "/v1/sessions", {"workload": "quad",
+                                                  "bogus_field": 1})
+        assert ei.value.status == 400
+        sess = client.create_session("quad", strategy="random", budget=4)
+        with pytest.raises(TuningServiceError) as ei:
+            sess.best()
+        assert ei.value.status == 409            # no observations yet
+        with pytest.raises(TuningServiceError) as ei:
+            client._call("GET", "/v1/nope")
+        assert ei.value.status == 404
+
+    def test_space_codec_roundtrip(self):
+        space = Space(
+            (Knob("i", "int", 4, lo=1, hi=64, align=2, log_scale=True,
+                  dynamic_bound=True, module="m", description="d"),
+             Knob("f", "float", 0.5, lo=0.0, hi=1.0,
+                  restart_required=False),
+             Knob("b", "bool", True, inert=True),
+             Knob("c", "categorical", "a", choices=("a", "b", "c"),
+                  gated_by=("b", (True,)), configurable=False)),
+            (SumLeq(("i", "f"), limit=32.0), Leq(("f", "i")),
+             Divides(("i",), target=64),
+             ProductLeq(("i", "i"), limit=4096.0)))
+        decoded = space_from_json(json.loads(json.dumps(
+            space_to_json(space))))
+        assert decoded == space
+
+
+# ---------------------------------------------------------------------------
+# satellite: BOStrategy state_dict / load_state
+# ---------------------------------------------------------------------------
+
+class TestBOStateDict:
+    def _run_one(self, budget=8, seed=3):
+        cfg = BOConfig(n_init=4, n_iter=12, fit_steps=15, seed=seed)
+        strat = BOStrategy(_space(), cfg)
+        ctrl = Controller(ImmediateEvaluationService(SeededQuad()),
+                          db=EvalDB(), seed=seed)
+        ctrl.run_async(strat, budget=budget, max_in_flight=1, min_ask=1)
+        return strat
+
+    def test_roundtrip_restores_trace_params_and_budget(self):
+        a = self._run_one()
+        sd = json.loads(json.dumps(a.state_dict()))   # wire-safe
+        b = BOStrategy(_space(), BOConfig(n_init=4, n_iter=12,
+                                          fit_steps=15, seed=3))
+        b.load_state(sd)
+        assert b.trace.values == a.trace.values
+        assert b.trace.configs == a.trace.configs
+        assert b._evals_done == a._evals_done
+        assert not b.finished
+        np.testing.assert_array_equal(
+            np.asarray(b._params.log_lengthscale),
+            np.asarray(a._params.log_lengthscale))
+        assert float(b._params.log_noise_var) == float(
+            a._params.log_noise_var)
+        # the restored strategy resumes asking within the restored space
+        nxt = b.ask(2)
+        assert len(nxt) == 2
+        for c in nxt:
+            assert set(c) == {"x", "y"}
+
+    def test_boundary_state_survives(self):
+        space = Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0,
+                            dynamic_bound=True),
+                       Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+        cfg = BOConfig(n_init=3, n_iter=9, fit_steps=10,
+                       boundary_tol=0.45, seed=0)
+        strat = BOStrategy(space, cfg)
+        ctrl = Controller(ImmediateEvaluationService(SeededQuad()),
+                          db=EvalDB(), seed=0)
+        ctrl.run_async(strat, budget=9, max_in_flight=1, min_ask=1)
+        sd = strat.state_dict()
+        fresh = BOStrategy(space, cfg)
+        fresh.load_state(sd)
+        assert (float(fresh.space.knob("x").lo),
+                float(fresh.space.knob("x").hi)) == tuple(sd["bounds"]["x"])
+        assert fresh.trace.boundary_events == strat.trace.boundary_events
+        assert fresh._space_version == strat._space_version
+
+    def test_load_state_validates(self):
+        a = self._run_one(budget=5)
+        sd = a.state_dict()
+        b = BOStrategy(_space(), BOConfig(n_init=4, n_iter=12))
+        with pytest.raises(ValueError, match="version"):
+            b.load_state({**sd, "version": 99})
+        with pytest.raises(ValueError, match="kernel"):
+            b.load_state({**sd, "kernel": "rbf"})
+        with pytest.raises(ValueError, match="knobs"):
+            b.load_state({**sd, "bounds": {"zz": [0.0, 1.0]}})
+
+    def test_other_strategies_refuse_state(self):
+        with _server() as srv:
+            with pytest.raises(TypeError, match="load_state"):
+                srv.create_session("quad", strategy="random", budget=4,
+                                   state={"kind": "random"})
+
+
+# ---------------------------------------------------------------------------
+# satellite: GP-prior racing intervals + variance-widened promotion
+# ---------------------------------------------------------------------------
+
+class TestGPPriorRacing:
+    def _group(self, values, asked=None):
+        return {"stats": RepeatStats.from_values(values),
+                "asked": asked or {"x": 0.5}, "prepared": {"x": 0.5},
+                "result": None, "measured": len(values), "extras": 0}
+
+    def test_mean_var_pools_toward_prior(self):
+        pol = ReplicationPolicy(n_repeats=2, adaptive=True)
+        svc = ImmediateEvaluationService(SeededQuad())
+        empirical = AdaptiveRacer(pol, svc)
+        g = self._group([1.0, 1.2])              # s^2 = 0.02, k = 2
+        assert empirical._mean_var(g) == pytest.approx(0.01)
+        # prior-aware: nu=1, w=2 -> pooled = (0.02 + 2*v0)/3, /k
+        prior = AdaptiveRacer(pol, svc, noise_prior=lambda c: 0.08)
+        assert prior._mean_var(g) == pytest.approx(
+            ((1 * 0.02 + 2 * 0.08) / 3) / 2)
+        # a strategy with no posterior yet falls back to empirical
+        lazy = AdaptiveRacer(pol, svc, noise_prior=lambda c: None)
+        assert lazy._mean_var(g) == empirical._mean_var(g)
+
+    def test_prior_widens_deceptively_tight_repeats(self):
+        """Two repeats that landed close together look settled to the
+        empirical interval; the GP noise prior (trained on every config)
+        knows the benchmark is noisier than that and keeps racing."""
+        pol = ReplicationPolicy(n_repeats=2, adaptive=True, z=2.0)
+        svc = ImmediateEvaluationService(SeededQuad())
+        g = self._group([1.0, 1.001])
+        empirical = AdaptiveRacer(pol, svc)
+        prior = AdaptiveRacer(pol, svc, noise_prior=lambda c: 0.5)
+        assert prior._mean_var(g) > 10 * empirical._mean_var(g)
+
+    def test_bo_measurement_variance_exposed(self):
+        strat = self._fit_bo()
+        v = strat.measurement_variance({"x": 0.4, "y": 0.6})
+        assert v is not None and v > 0.0
+        fresh = BOStrategy(_space(), BOConfig())
+        assert fresh.measurement_variance({"x": 0.4, "y": 0.6}) is None
+
+    def _fit_bo(self):
+        cfg = BOConfig(n_init=4, n_iter=8, fit_steps=15, seed=1)
+        strat = BOStrategy(_space(), cfg)
+        ctrl = Controller(ImmediateEvaluationService(SeededQuad()),
+                          db=EvalDB(), seed=1)
+        ctrl.run_async(strat, budget=6, max_in_flight=1, min_ask=1)
+        return strat
+
+    def test_adaptive_run_uses_gp_prior_by_default(self):
+        pol = ReplicationPolicy(n_repeats=2, adaptive=True, max_repeats=4)
+        strat = BOStrategy(_space(), BOConfig(n_init=3, n_iter=5,
+                                              fit_steps=10, seed=2))
+        ctrl = Controller(ImmediateEvaluationService(SeededQuad()),
+                          db=EvalDB(), seed=2, replication=pol)
+        trace = ctrl.run_async(strat, budget=8)
+        assert len(trace.values) == 8
+        # gp_prior=False keeps the legacy empirical-only racer working
+        pol_off = ReplicationPolicy(n_repeats=2, adaptive=True,
+                                    max_repeats=4, gp_prior=False)
+        strat2 = BOStrategy(_space(), BOConfig(n_init=3, n_iter=5,
+                                               fit_steps=10, seed=2))
+        ctrl2 = Controller(ImmediateEvaluationService(SeededQuad()),
+                           db=EvalDB(), seed=2, replication=pol_off)
+        assert len(ctrl2.run_async(strat2, budget=8).values) == 8
+
+
+class TestVarianceWidenedPromotion:
+    class _ListStrategy:
+        """Asks a scripted candidate list once; records what it's told."""
+
+        def __init__(self, cands):
+            self.cands = list(cands)
+            self.told = []
+            self.asked = False
+            from repro.core.strategy import Trace
+            self.trace = Trace()
+
+        @property
+        def finished(self):
+            return self.asked
+
+        def ask(self, n=None):
+            self.asked = True
+            return [dict(c) for c in self.cands]
+
+        def tell(self, configs, values, variances=None):
+            self.told.append((list(values), list(variances or [])))
+            self.trace.extend(configs, values, variances)
+
+        def best(self):
+            return self.trace.best
+
+    class _PresetService:
+        """Immediate service returning scripted (value, variance) per
+        config key; promotion fidelity returns value + 10."""
+
+        def __init__(self, table):
+            from repro.core.service import _ServiceBase
+            self.table = table
+            base = _ServiceBase()
+            self._base = base
+
+        def submit(self, requests):
+            from repro.core.service import EvalResult
+            tickets = self._base._issue(requests)
+            for t in tickets:
+                v, var = self.table[t.request.config["name"]]
+                if t.request.fidelity == "promote":
+                    v, var = v + 10.0, 0.0
+                self._base._complete(EvalResult(t, v, variance=var))
+            return tickets
+
+        def poll(self, timeout=0.0, min_results=1):
+            return self._base.poll(timeout, min_results)
+
+        def gather(self, tickets):
+            return self._base.gather(tickets)
+
+        def drain(self):
+            return self._base.drain()
+
+        def close(self):
+            pass
+
+    def _run(self, promote_z):
+        # A: best raw mean but huge screen variance; B: slightly worse
+        # mean, measured precisely
+        table = {"A": (1.0, 0.09), "B": (1.05, 0.0)}
+        cands = [{"name": "A"}, {"name": "B"}]
+        strat = self._ListStrategy(cands)
+        ctrl = Controller(self._PresetService(table), db=EvalDB())
+        best_c, best_v, sched = ctrl.run_successive_halving(
+            strat, rounds=1, screen=2, promote=1, promote_z=promote_z)
+        return strat, sched
+
+    def test_promote_z_zero_ranks_on_raw_mean(self):
+        strat, sched = self._run(promote_z=0.0)
+        assert sched[0]["promoted_configs"] == [{"name": "A"}]
+
+    def test_promote_z_widens_noisy_screens(self):
+        # widened(A) = 1.0 + 2*0.3 = 1.6 > widened(B) = 1.05
+        strat, sched = self._run(promote_z=2.0)
+        assert sched[0]["promoted_configs"] == [{"name": "B"}]
+        # the strategy is told un-widened means, with variances
+        values, variances = strat.told[0]
+        assert values[0] == 1.0 and variances[0] == 0.09
+        assert values[1] == 11.05 and variances[1] == 0.0
