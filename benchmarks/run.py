@@ -16,6 +16,7 @@ One module per paper table/figure (DESIGN.md §7):
   perf_multi_device  sharded candidate scoring + kernel-autotune dogfood
   perf_replication  adaptive vs fixed-k replicated measurements budget
   perf_tuning_service  concurrent sessions sharing one evaluation pool
+  perf_transfer  leave-one-workload-out meta-learned priors over the zoo
 
 ``--json [PATH]`` writes per-benchmark wall-clock timings and statuses to
 an artifacts JSON (default artifacts/bench/run_timings.json) so the perf
@@ -34,8 +35,8 @@ from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig6_ranking, fig7_topk_efficiency,
                         fig8_two_fidelity, perf_async_service,
                         perf_batch_pipeline, perf_gp_ask, perf_multi_device,
-                        perf_replication, perf_tuning_service, roofline_table,
-                        sec34_optimizers, table2_top16)
+                        perf_replication, perf_transfer, perf_tuning_service,
+                        roofline_table, sec34_optimizers, table2_top16)
 
 MODULES = [
     ("fig2b_response_surface", fig2b_response_surface),
@@ -54,6 +55,7 @@ MODULES = [
     ("perf_multi_device", perf_multi_device),
     ("perf_replication", perf_replication),
     ("perf_tuning_service", perf_tuning_service),
+    ("perf_transfer", perf_transfer),
 ]
 
 

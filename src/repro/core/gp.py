@@ -127,6 +127,30 @@ def params_from_dict(d: dict) -> GPParams:
 PAD_NOISE = 1e6   # pseudo-point noise: pads contribute ~nothing to the fit
 
 
+class MTGPParams(NamedTuple):
+    """Multi-task (ICM) hyperparameters: the base-kernel triple shared
+    across tasks plus a rank-1-plus-diagonal task covariance and a
+    per-task mean offset.  ``task_w``/``log_task_kappa``/``task_offset``
+    are [T]; everything else matches :class:`GPParams`."""
+    log_lengthscale: jnp.ndarray   # [d] (ARD, shared across tasks)
+    log_signal_var: jnp.ndarray    # []
+    log_noise_var: jnp.ndarray     # []
+    task_w: jnp.ndarray            # [T] rank-1 factor of the task kernel
+    log_task_kappa: jnp.ndarray    # [T] per-task diagonal boost
+    task_offset: jnp.ndarray       # [T] per-task mean (standardized y)
+
+
+class MTGPState(NamedTuple):
+    params: MTGPParams
+    x: jnp.ndarray                 # [n, d] inputs (unit cube, no task col)
+    tasks: jnp.ndarray             # [n] int32 task indices
+    y: jnp.ndarray                 # [n] standardized targets
+    chol: jnp.ndarray              # [n, n]
+    alpha: jnp.ndarray             # [n] K⁻¹ (y - offset[tasks])
+    y_mean: jnp.ndarray
+    y_std: jnp.ndarray
+
+
 def _jitter(nv, sv):
     """Relative diagonal jitter: keeps the condition number f32-safe even
     when the fitted signal variance is large / lengthscale long (K near
@@ -242,7 +266,8 @@ def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
         steps: int = 200, params: Optional[GPParams] = None,
         pad: bool = True, pad_to: Optional[int] = None,
         use_pallas: bool = False,
-        obs_var: Optional[np.ndarray] = None) -> GPState:
+        obs_var: Optional[np.ndarray] = None,
+        tasks: Optional[np.ndarray] = None):
     """Standardize y, fit hyperparameters, build the posterior.
 
     ``pad`` appends huge-noise pseudo-points up to a shape bucket so the
@@ -272,7 +297,27 @@ def fit(x: np.ndarray, y: np.ndarray, kind: str = "matern52",
     kernels/gp_gram tile kernel (matern52 only; jnp fallback otherwise).
     The marginal-likelihood Adam loop stays on the jnp kernel — it is
     differentiated, and the Pallas kernel defines no VJP.
+
+    ``tasks`` [n] switches on the multi-task (ICM) path: integer task
+    indices aligned with the rows of ``x``.  With more than one distinct
+    task the fit routes through :func:`fit_multitask` and returns an
+    :class:`MTGPState`; with exactly one distinct task the column is
+    dropped and this is *exactly* the single-task fit (same jit cache,
+    same GPState) — the fallback the transfer layer relies on when a
+    corpus collapses to a single workload.
     """
+    if tasks is not None:
+        t = np.asarray(tasks, np.int32)
+        if t.shape[0] != np.asarray(x).shape[0]:
+            raise ValueError(
+                f"tasks has {t.shape[0]} rows, x has "
+                f"{np.asarray(x).shape[0]}")
+        if t.size and int(t.max()) > 0:
+            if params is not None and not isinstance(params, MTGPParams):
+                raise TypeError("multi-task fit warm-start needs MTGPParams")
+            return fit_multitask(x, y, t, kind=kind, steps=steps,
+                                 params=params, obs_var=obs_var)
+        # exact single-task fallback: one task present, column dropped
     xj, yj, ej, y_mean, y_std = _prepare(x, y, pad, pad_to, obs_var)
     if params is None:
         params = init_params(int(xj.shape[1]))
@@ -297,6 +342,216 @@ def condition(params: GPParams, x: np.ndarray, y: np.ndarray,
     reference path and the entry for one-off posterior updates.)"""
     return fit(x, y, kind, steps=0, params=params, pad=pad, pad_to=pad_to,
                use_pallas=use_pallas, obs_var=obs_var)
+
+
+# ---------------------------------------------------------------------------
+# multi-task GP (intrinsic coregionalization, rank-1 + diagonal)
+# ---------------------------------------------------------------------------
+
+def init_mt_params(d: int, n_tasks: int, lengthscale: float = 0.3,
+                   signal: float = 1.0, noise: float = 1e-2,
+                   offsets: Optional[np.ndarray] = None) -> MTGPParams:
+    """ICM init: ``task_w = 1`` (tasks fully correlated a priori) with a
+    small diagonal boost, per-task offsets from the data when given."""
+    off = (jnp.zeros((n_tasks,), jnp.float32) if offsets is None
+           else jnp.asarray(offsets, jnp.float32))
+    return MTGPParams(
+        log_lengthscale=jnp.full((d,), math.log(lengthscale), jnp.float32),
+        log_signal_var=jnp.asarray(math.log(signal), jnp.float32),
+        log_noise_var=jnp.asarray(math.log(noise), jnp.float32),
+        task_w=jnp.ones((n_tasks,), jnp.float32),
+        log_task_kappa=jnp.full((n_tasks,), math.log(0.1), jnp.float32),
+        task_offset=off,
+    )
+
+
+def mt_params_to_dict(params: MTGPParams) -> dict:
+    """JSON snapshot of the multi-task hyperparameters (log-domain values
+    as fitted, like :func:`params_to_dict`)."""
+    return {
+        "log_lengthscale": [float(v)
+                            for v in np.asarray(params.log_lengthscale)],
+        "log_signal_var": float(params.log_signal_var),
+        "log_noise_var": float(params.log_noise_var),
+        "task_w": [float(v) for v in np.asarray(params.task_w)],
+        "log_task_kappa": [float(v)
+                           for v in np.asarray(params.log_task_kappa)],
+        "task_offset": [float(v) for v in np.asarray(params.task_offset)],
+    }
+
+
+def mt_params_from_dict(d: dict) -> MTGPParams:
+    return MTGPParams(
+        log_lengthscale=jnp.asarray(d["log_lengthscale"], jnp.float32),
+        log_signal_var=jnp.asarray(float(d["log_signal_var"]), jnp.float32),
+        log_noise_var=jnp.asarray(float(d["log_noise_var"]), jnp.float32),
+        task_w=jnp.asarray(d["task_w"], jnp.float32),
+        log_task_kappa=jnp.asarray(d["log_task_kappa"], jnp.float32),
+        task_offset=jnp.asarray(d["task_offset"], jnp.float32),
+    )
+
+
+def shared_params(params: MTGPParams) -> GPParams:
+    """Project the shared base-kernel triple out of a multi-task fit —
+    the warm start a single-task GP on a *new* workload inherits."""
+    return GPParams(log_lengthscale=params.log_lengthscale,
+                    log_signal_var=params.log_signal_var,
+                    log_noise_var=params.log_noise_var)
+
+
+def _task_cov(params: MTGPParams):
+    """B = w wᵀ + diag(exp κ) — rank-1 plus diagonal, always PSD."""
+    w = params.task_w
+    return w[:, None] * w[None, :] + jnp.diag(
+        jnp.exp(params.log_task_kappa))
+
+
+def _mt_build(params: MTGPParams, x, tasks, y, kind: str,
+              extra_noise=None):
+    ls = jnp.exp(params.log_lengthscale)
+    sv = jnp.exp(params.log_signal_var)
+    nv = jnp.exp(params.log_noise_var)
+    b = _task_cov(params)
+    k = KERNELS[kind](x, x, ls, sv) * b[tasks[:, None], tasks[None, :]]
+    n = x.shape[0]
+    diag = jnp.full((n,), _jitter(nv, sv), k.dtype)
+    if extra_noise is not None:
+        diag = diag + extra_noise
+    kn = k + jnp.diag(diag)
+    chol = jnp.linalg.cholesky(kn)
+    r = y - params.task_offset[tasks]
+    alpha = jax.scipy.linalg.cho_solve((chol, True), r)
+    return chol, alpha, r
+
+
+def mt_neg_log_marginal(params: MTGPParams, x, tasks, y, kind: str,
+                        extra_noise=None):
+    chol, alpha, r = _mt_build(params, x, tasks, y, kind, extra_noise)
+    n = x.shape[0]
+    return (0.5 * r @ alpha
+            + jnp.sum(jnp.log(jnp.diagonal(chol)))
+            + 0.5 * n * math.log(2 * math.pi))
+
+
+@partial(jax.jit, static_argnames=("kind", "steps"))
+def _mt_fit(params: MTGPParams, x, tasks, y, kind: str, steps: int = 200,
+            lr: float = 0.05, extra_noise=None):
+    """Adam on the joint (base + task) log-marginal — the same scan body
+    as :func:`_fit` with the task blocks clamped to their own boxes."""
+    grad_fn = jax.value_and_grad(
+        lambda p: mt_neg_log_marginal(p, x, tasks, y, kind, extra_noise))
+
+    def step(carry, _):
+        p, m, v, t = carry
+        loss, g = grad_fn(p)
+        g = jax.tree.map(lambda gi: jnp.nan_to_num(gi), g)
+        t = t + 1
+        m = jax.tree.map(lambda mi, gi: 0.9 * mi + 0.1 * gi, m, g)
+        v = jax.tree.map(lambda vi, gi: 0.999 * vi + 0.001 * gi * gi, v, g)
+        mhat = jax.tree.map(lambda mi: mi / (1 - 0.9 ** t), m)
+        vhat = jax.tree.map(lambda vi: vi / (1 - 0.999 ** t), v)
+        p = jax.tree.map(
+            lambda pi, mh, vh: pi - lr * mh / (jnp.sqrt(vh) + 1e-8),
+            p, mhat, vhat)
+        p = MTGPParams(
+            log_lengthscale=jnp.clip(p.log_lengthscale,
+                                     math.log(1e-2), math.log(3.0)),
+            log_signal_var=jnp.clip(p.log_signal_var,
+                                    math.log(1e-2), math.log(1e2)),
+            log_noise_var=jnp.clip(p.log_noise_var,
+                                   math.log(1e-4), math.log(1.0)),
+            task_w=jnp.clip(p.task_w, -3.0, 3.0),
+            log_task_kappa=jnp.clip(p.log_task_kappa,
+                                    math.log(1e-4), math.log(10.0)),
+            task_offset=jnp.clip(p.task_offset, -5.0, 5.0),
+        )
+        return (p, m, v, t), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (p, _, _, _), losses = jax.lax.scan(
+        step, (params, zeros, zeros, jnp.asarray(0, jnp.float32)),
+        None, length=steps)
+    return p, losses
+
+
+def fit_multitask(x: np.ndarray, y: np.ndarray, tasks: np.ndarray,
+                  kind: str = "matern52", steps: int = 200,
+                  params: Optional[MTGPParams] = None,
+                  obs_var: Optional[np.ndarray] = None) -> MTGPState:
+    """Fit the ICM multi-task GP over stacked per-task observations.
+
+    Targets are standardized *globally* (one μ/σ over every task) and the
+    per-task level differences are absorbed by the learned ``task_offset``
+    mean — initialized at each task's empirical standardized mean so the
+    Adam loop starts from the right basin.  No shape padding: a corpus
+    fit happens once per transfer warm-start, not once per BO round, so
+    jit-cache churn is not on the hot path.
+    """
+    x = np.asarray(x, np.float32)
+    y_raw = np.asarray(y, np.float32)
+    t = np.asarray(tasks, np.int32)
+    n_tasks = int(t.max()) + 1
+    y_mean, y_std = float(y_raw.mean()), float(y_raw.std())
+    if y_std < 1e-12:
+        y_std = 1.0
+    ys = (y_raw - y_mean) / y_std
+    extra = None
+    if obs_var is not None:
+        extra = jnp.asarray(
+            np.asarray(obs_var, np.float32) / (y_std * y_std))
+    if params is None:
+        offsets = np.zeros(n_tasks, np.float32)
+        for i in range(n_tasks):
+            sel = t == i
+            if sel.any():
+                offsets[i] = float(ys[sel].mean())
+        params = init_mt_params(int(x.shape[1]), n_tasks, offsets=offsets)
+    xj, tj, yj = jnp.asarray(x), jnp.asarray(t), jnp.asarray(ys)
+    if steps > 0:
+        params, _ = _mt_fit(params, xj, tj, yj, kind, steps=steps,
+                            extra_noise=extra)
+    chol, alpha, _ = _mt_build(params, xj, tj, yj, kind, extra)
+    return MTGPState(params, xj, tj, yj, chol, alpha,
+                     jnp.asarray(y_mean), jnp.asarray(y_std))
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _mt_predict(state: MTGPState, xq, w_q, kappa_q, off_q, kind: str):
+    ls = jnp.exp(state.params.log_lengthscale)
+    sv = jnp.exp(state.params.log_signal_var)
+    kq = (KERNELS[kind](xq, state.x, ls, sv)
+          * (w_q * state.params.task_w)[state.tasks][None, :])
+    mean_s = off_q + kq @ state.alpha
+    v = jax.scipy.linalg.solve_triangular(state.chol, kq.T, lower=True)
+    prior = (w_q * w_q + kappa_q) * sv
+    var_s = jnp.maximum(prior - jnp.sum(v * v, axis=0), 1e-12)
+    mean = mean_s * state.y_std + state.y_mean
+    std = jnp.sqrt(var_s) * state.y_std
+    return mean, std
+
+
+def predict_multitask(state: MTGPState, xq, task: Optional[int] = None,
+                      kind: str = "matern52"):
+    """Posterior mean/std at ``xq`` for one task (original y scale).
+
+    ``task=None`` is the **stacked prior** for an *unseen* task: its
+    rank-1 weight, diagonal and mean offset are the averages over the
+    fitted tasks, so the prediction borrows exactly the structure every
+    corpus workload shares and stays honestly wide where they disagree
+    (the averaged ``w`` shrinks the cross-covariance, inflating the
+    posterior variance — which is what pseudo-observation inflation
+    feeds on)."""
+    p = state.params
+    if task is None:
+        w_q = jnp.mean(p.task_w)
+        kappa_q = jnp.mean(jnp.exp(p.log_task_kappa))
+        off_q = jnp.mean(p.task_offset)
+    else:
+        w_q = p.task_w[task]
+        kappa_q = jnp.exp(p.log_task_kappa)[task]
+        off_q = p.task_offset[task]
+    return _mt_predict(state, jnp.asarray(xq, jnp.float32),
+                       w_q, kappa_q, off_q, kind)
 
 
 @partial(jax.jit, static_argnames=("kind", "use_pallas"))

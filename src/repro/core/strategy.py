@@ -370,6 +370,11 @@ class BOStrategy(_StrategyBase):
         super().__init__(space)
         self.cfg = cfg or BOConfig()
         self.rng = np.random.default_rng(self.cfg.seed)
+        # the base space's numeric bounds, before any dynamic expansion —
+        # the identity a state snapshot must match to be loadable here
+        self._base_bounds = {k.name: (float(k.lo), float(k.hi))
+                             for k in space.knobs
+                             if k.kind in ("int", "float")}
         self._init_queue = init_design(space, self.cfg.n_init, self.rng,
                                        init_configs)
         self._n_init = len(self._init_queue)
@@ -538,6 +543,20 @@ class BOStrategy(_StrategyBase):
         devs = pool_devices(None if sc is True else int(sc))
         return devs if len(devs) > 1 else None
 
+    # -- GP training set (overridable) ----------------------------------------
+
+    def _training_data(self) -> Tuple[List[Config], List[float],
+                                      List[float]]:
+        """The rows the GP is fitted on: ``(configs, values, variances)``
+        in *raw* objective units.  The base strategy trains on exactly the
+        trace; :class:`repro.transfer.TransferBOStrategy` overrides this
+        to append prior pseudo-observations — rows the GP sees but the
+        trace (and therefore :meth:`best` and the budget) never does.
+        The default must stay the trace verbatim: equal lists in, equal
+        posterior out is what keeps the empty-corpus transfer path
+        trace-identical to plain BO."""
+        return self.trace.configs, self.trace.values, self.trace.variances
+
     def ask(self, n: Optional[int] = None) -> List[Config]:
         # -- initial design ---------------------------------------------------
         if self._init_queue:
@@ -564,8 +583,9 @@ class BOStrategy(_StrategyBase):
             # size bucket
             self._pad_to = gp._bucket(self._n_init + self.cfg.n_iter)
         cfg = self.cfg
-        x = self.space.encode_batch(self.trace.configs)
-        y = np.asarray(self.trace.values, np.float64)
+        t_configs, t_values, t_vars = self._training_data()
+        x = self.space.encode_batch(t_configs)
+        y = np.asarray(t_values, np.float64)
         # heteroscedastic channel: replicated measurements report the
         # variance of their pooled mean; rows without an estimate stay at
         # 0.0 (global-scalar fallback).  All-zero variances pass None so
@@ -573,7 +593,7 @@ class BOStrategy(_StrategyBase):
         # traces.  Under log_objective the delta method maps raw variance
         # onto the log scale: var[log y] ≈ var[y] / y².
         obs = None
-        var = np.asarray(self.trace.variances, np.float64)
+        var = np.asarray(t_vars, np.float64)
         if var.size == y.size and np.any(var > 0):
             obs = var / np.maximum(y, 1e-12) ** 2 if cfg.log_objective \
                 else var.copy()
@@ -709,6 +729,9 @@ class BOStrategy(_StrategyBase):
             "kernel": self.cfg.kernel,
             "params": (None if self._params is None
                        else gp.params_to_dict(self._params)),
+            "knobs": sorted(self.space.names),
+            "base_bounds": {n: [lo, hi]
+                            for n, (lo, hi) in self._base_bounds.items()},
             "bounds": {k.name: [float(k.lo), float(k.hi)]
                        for k in self.space.knobs
                        if k.kind in ("int", "float")},
@@ -741,6 +764,30 @@ class BOStrategy(_StrategyBase):
             raise ValueError(
                 f"BOStrategy.load_state: state was fitted with kernel "
                 f"{sd['kernel']!r}, this strategy uses {self.cfg.kernel!r}")
+        # Space identity: a snapshot is only loadable over the space it
+        # was fitted on.  Loading across workloads whose spaces merely
+        # *look* alike would silently hand the GP a permuted / rescaled
+        # unit cube, so every mismatch is a hard error, never a warning.
+        if "knobs" in sd:
+            theirs, ours = set(sd["knobs"]), set(self.space.names)
+            if theirs != ours:
+                missing = sorted(theirs - ours)
+                extra = sorted(ours - theirs)
+                raise ValueError(
+                    "BOStrategy.load_state: space mismatch — state knobs "
+                    f"absent here: {missing[:8]}; knobs the state lacks: "
+                    f"{extra[:8]}")
+        for name, (lo, hi) in sd.get("base_bounds", {}).items():
+            if name not in self._base_bounds:
+                raise ValueError("BOStrategy.load_state: state names a "
+                                 f"knob this space lacks: {name!r}")
+            mine = self._base_bounds[name]
+            if (float(lo), float(hi)) != mine:
+                raise ValueError(
+                    f"BOStrategy.load_state: base bounds differ for "
+                    f"{name!r}: state has [{lo}, {hi}], this space has "
+                    f"[{mine[0]}, {mine[1]}] — refusing to load a GP "
+                    f"fitted on a different unit-cube scaling")
         bounds = sd.get("bounds", {})
         unknown = set(bounds) - set(self.space.names)
         if unknown:

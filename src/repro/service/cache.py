@@ -41,18 +41,44 @@ def _norm(v):
     return item() if item is not None else v
 
 
-def probe_key(request: EvalRequest) -> Optional[Tuple]:
+def probe_key(request: EvalRequest, space=None) -> Optional[Tuple]:
     """Identity of a measurement, or ``None`` when it has no identity.
 
     A probe without a seed is a fresh noise draw every time — never
     cacheable.  ``n_repeats`` participates because a replicating service
     fans a request into that many sub-measurements (a 2-repeat pooled
-    mean is not a 1-repeat value)."""
+    mean is not a 1-repeat value).
+
+    With the workload's ``space``, the config is keyed *projected*:
+    :meth:`~repro.core.space.Space.project` normalizes it (clipping,
+    gating pins, constraint repair), then knobs that cannot affect the
+    measurement — ``inert`` decoys, and knobs whose gate selector holds
+    them at an ignored default — are dropped from the key.  Two sessions
+    probing configs that differ only in a telemetry knob then share one
+    measurement.  The shared result is *semantically* identical, not
+    bit-identical: a seeded backend that hashes the full config into its
+    noise stream would have drawn differently for each variant — but
+    both draws come from the same distribution, which is exactly the
+    equivalence the cache trades on (ROADMAP service rung (d))."""
     if request.seed is None:
         return None
+    cfg = request.config
+    if space is not None:
+        cfg = space.project(cfg)
+        drop = set()
+        for k in space.knobs:
+            if k.inert:
+                drop.add(k.name)
+            elif k.gated_by is not None:
+                sel, enabling = k.gated_by
+                if cfg.get(sel) not in enabling:
+                    drop.add(k.name)     # pinned to default by project()
+        items = ((n, v) for n, v in cfg.items() if n not in drop)
+    else:
+        items = cfg.items()
     return (request.workload, request.fidelity, int(request.seed),
             request.n_repeats,
-            tuple(sorted((k, _norm(v)) for k, v in request.config.items())))
+            tuple(sorted((k, _norm(v)) for k, v in items)))
 
 
 class ProbeCache:

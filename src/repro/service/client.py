@@ -77,6 +77,12 @@ class TuningClient:
         return self._call("GET", "/v1/sessions")["sessions"]
 
     def create_session(self, workload: str, **kwargs) -> "RemoteSession":
+        """Create a session; kwargs pass straight to the wire's
+        create-session fields.  Two that matter for warm starts:
+        ``transfer_from`` (``True`` or a spec dict) makes a
+        ``strategy="transfer_bo"`` session mine the daemon's sharded log
+        for sibling-workload evidence, and ``resume="s0007"`` reopens an
+        idle-evicted session from its server-side snapshot."""
         out = self._call("POST", "/v1/sessions",
                          {"workload": workload, **kwargs})
         return RemoteSession(self, out["session"], out["workload"],

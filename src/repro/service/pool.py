@@ -130,6 +130,9 @@ class SharedEvaluationPool:
         self.inner = WorkloadPool(dict(backends or {}),
                                   max_workers=max_workers)
         self.cache = ProbeCache(cache_capacity)
+        # workload -> Space: when registered, probe keys are *projected*
+        # (inert/gated knobs dropped) so near-identical probes dedupe
+        self.spaces: Dict[str, object] = {}
         self._lock = threading.Lock()
         # inner uid -> (key-or-None, owner view, owner view-uid)
         self._meta: Dict[int, Tuple[Optional[Tuple], PoolView, int]] = {}
@@ -146,6 +149,14 @@ class SharedEvaluationPool:
     def add_backend(self, workload: str, backend) -> None:
         self.inner.add_backend(workload, backend)
 
+    def register_space(self, workload: str, space) -> None:
+        """Declare a workload's search space: from now on its probe keys
+        are projected through it (:func:`~repro.service.cache.probe_key`
+        with ``space``), so probes differing only in inert or gated-off
+        knobs share one cache entry."""
+        with self._lock:
+            self.spaces[workload] = space
+
     @property
     def workloads(self) -> Tuple[str, ...]:
         return tuple(sorted(self.inner.backends))
@@ -158,7 +169,7 @@ class SharedEvaluationPool:
         hits: List[Tuple[int, EvalResult]] = []
         to_submit: List[Tuple[EvalRequest, Optional[Tuple], int]] = []
         for t in tickets:
-            key = probe_key(t.request)
+            key = probe_key(t.request, self.spaces.get(t.request.workload))
             verdict, res = self.cache.lookup(key, (view, t.uid))
             if verdict == "hit":
                 hits.append((t.uid, res))

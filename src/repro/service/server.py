@@ -19,9 +19,11 @@ exactly what the benchmarks drive); real deployments register their own
 
 from __future__ import annotations
 
+import json
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.controller import Controller
 from repro.core.replication import ReplicationPolicy
@@ -31,6 +33,7 @@ from repro.core.strategy import (BOConfig, GAConfig, SAConfig, make_strategy,
 from repro.service.pool import SharedEvaluationPool
 from repro.service.session import TuningSession
 from repro.service.shardlog import ShardedEvalLog
+from repro.transfer import build_corpus   # registers "transfer_bo" too
 
 
 @dataclass
@@ -78,7 +81,8 @@ def default_catalog() -> Dict[str, WorkloadSpec]:
     return {s.name: s for s in specs}
 
 
-_STRATEGY_CFG = {"bo": BOConfig, "sa": SAConfig, "ga": GAConfig}
+_STRATEGY_CFG = {"bo": BOConfig, "sa": SAConfig, "ga": GAConfig,
+                 "transfer_bo": BOConfig}
 
 
 def _strategy_kwargs(name: str, kwargs: Optional[dict]) -> dict:
@@ -103,16 +107,24 @@ class TuningServer:
 
     def __init__(self, workloads: Optional[Dict[str, WorkloadSpec]] = None,
                  db_root: Optional[str] = None, n_shards: int = 4,
-                 max_workers: int = 4, cache_capacity: int = 4096):
+                 max_workers: int = 4, cache_capacity: int = 4096,
+                 session_ttl: Optional[float] = None):
         self.registry: Dict[str, WorkloadSpec] = (
             dict(workloads) if workloads is not None else default_catalog())
         self.pool = SharedEvaluationPool(max_workers=max_workers,
                                          cache_capacity=cache_capacity)
         self.log = ShardedEvalLog(db_root, n_shards=n_shards)
         self.sessions: Dict[str, TuningSession] = {}
+        # idle-session eviction: sessions untouched for longer than
+        # session_ttl seconds are snapshotted (state_dict to the log
+        # root) and closed by the lazy sweep — no background thread, the
+        # sweep runs on the server's own entry points
+        self.session_ttl = session_ttl
+        self._snapshots: Dict[str, dict] = {}
         self._lock = threading.RLock()
         self._counter = 0
         self.created_total = 0
+        self.evicted_total = 0
 
     # -- workloads -----------------------------------------------------------
 
@@ -139,6 +151,9 @@ class TuningServer:
             space, backend = spec.materialize()
             if name not in self.pool.inner.backends:
                 self.pool.add_backend(name, backend)
+                # projected probe keys: the cache dedupes probes that
+                # differ only in inert / gated-off knobs of this space
+                self.pool.register_space(name, space)
             return space, backend
 
     # -- sessions ------------------------------------------------------------
@@ -150,12 +165,28 @@ class TuningServer:
                        replication: Optional[dict] = None,
                        deterministic: bool = True,
                        tag: str = "",
-                       state: Optional[dict] = None) -> TuningSession:
+                       state: Optional[dict] = None,
+                       transfer_from: Union[None, bool, dict] = None,
+                       resume: Optional[str] = None) -> TuningSession:
+        self.evict_idle()
         if strategy not in strategy_names():
             raise KeyError(f"unknown strategy {strategy!r}; "
                            f"registered: {strategy_names()}")
         space, _ = self._resolve_workload(workload)
         kwargs = _strategy_kwargs(strategy, strategy_kwargs)
+        if resume is not None:
+            if state is not None:
+                raise ValueError("create-session: pass either 'state' or "
+                                 "'resume', not both")
+            snap = self._load_snapshot(resume)
+            if snap["workload"] != workload:
+                raise ValueError(
+                    f"resume {resume!r}: snapshot belongs to workload "
+                    f"{snap['workload']!r}, not {workload!r}")
+            state = snap["state"]
+        if transfer_from:
+            kwargs["corpus"] = self._build_transfer_corpus(
+                workload, space, transfer_from)
         strat = make_strategy(strategy, space, budget=budget, seed=seed,
                               batch_size=batch_size, **kwargs)
         if state is not None:
@@ -180,7 +211,94 @@ class TuningServer:
             self.sessions[sid] = sess
             return sess
 
+    def _build_transfer_corpus(self, workload: str, space: Space,
+                               spec: Union[bool, dict]):
+        """``transfer_from`` corpus over the daemon's own sharded log.
+
+        The spec (``True`` for all defaults) may narrow the donor set
+        (``workloads``), extend the exclusion list (``exclude`` — the
+        target workload is always excluded), and tune corpus assembly
+        (``min_points``).  Donor workloads hosted in the registry get
+        their spaces materialized so signature mismatches are detected
+        up front rather than row by row."""
+        spec = {} if spec is True else dict(spec)
+        unknown = set(spec) - {"workloads", "exclude", "min_points"}
+        if unknown:
+            raise ValueError(f"transfer_from: unknown fields "
+                             f"{sorted(unknown)}")
+        exclude = set(spec.get("exclude", ())) | {workload}
+        only = spec.get("workloads")
+        records = self.log.records
+        if only is not None:
+            only = set(only)
+            records = [r for r in records if r.workload in only]
+        spaces: Dict[str, Space] = {}
+        for wl in {r.workload for r in records if r.workload}:
+            if wl in exclude or wl not in self.registry:
+                continue
+            try:
+                spaces[wl] = self.registry[wl].materialize()[0]
+            except Exception:
+                pass          # undeclared: corpus falls back to row checks
+        return build_corpus(space, [records], spaces=spaces,
+                            exclude=sorted(exclude),
+                            min_points=int(spec.get("min_points", 2)))
+
+    # -- idle eviction + snapshots -------------------------------------------
+
+    def _snapshot_dir(self):
+        if self.log.root is None:
+            return None
+        d = self.log.root / "sessions"
+        d.mkdir(parents=True, exist_ok=True)
+        return d
+
+    def _snapshot(self, sess: TuningSession) -> Optional[dict]:
+        fn = getattr(sess.strategy, "state_dict", None)
+        if fn is None:
+            return None
+        snap = {"session": sess.session_id, "workload": sess.workload,
+                "strategy": sess.strategy_name, "state": fn(),
+                "evicted_at": time.time()}
+        self._snapshots[sess.session_id] = snap
+        d = self._snapshot_dir()
+        if d is not None:
+            (d / f"{sess.session_id}.json").write_text(json.dumps(snap))
+        return snap
+
+    def _load_snapshot(self, name: str) -> dict:
+        with self._lock:
+            snap = self._snapshots.get(name)
+        if snap is None:
+            d = self._snapshot_dir()
+            p = d / f"{name}.json" if d is not None else None
+            if p is None or not p.exists():
+                raise KeyError(f"no session snapshot {name!r}")
+            snap = json.loads(p.read_text())
+        return snap
+
+    def evict_idle(self, now: Optional[float] = None) -> List[str]:
+        """Close sessions idle past ``session_ttl``, each snapshotted
+        first (``state_dict`` to the log root, when the strategy has
+        one) so ``create_session(resume=<id>)`` can continue it.  Runs
+        lazily from the server's own entry points — a daemon with no
+        traffic evicts nothing, and needs to evict nothing."""
+        if self.session_ttl is None:
+            return []
+        now = time.time() if now is None else now
+        with self._lock:
+            idle = [s for s in self.sessions.values()
+                    if now - s.last_used > self.session_ttl]
+            for s in idle:
+                del self.sessions[s.session_id]
+                self._snapshot(s)
+                self.evicted_total += 1
+        for s in idle:
+            s.close()
+        return [s.session_id for s in idle]
+
     def session(self, session_id: str) -> TuningSession:
+        self.evict_idle()
         with self._lock:
             try:
                 return self.sessions[session_id]
@@ -194,16 +312,19 @@ class TuningServer:
         sess.close()
 
     def list_sessions(self) -> List[dict]:
+        self.evict_idle()
         with self._lock:
             return [s.describe() for s in self.sessions.values()]
 
     # -- daemon-level introspection / lifecycle ------------------------------
 
     def stats(self) -> dict:
+        self.evict_idle()
         with self._lock:
             open_sessions = len(self.sessions)
         return {"sessions_open": open_sessions,
                 "sessions_created": self.created_total,
+                "sessions_evicted": self.evicted_total,
                 "evaluations_logged": len(self.log),
                 "pool": self.pool.stats()}
 

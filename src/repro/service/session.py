@@ -55,9 +55,15 @@ class TuningSession:
         self.budget = budget
         self.batch_size = batch_size
         self.created_at = time.time()
+        self.last_used = self.created_at
         self.closed = False
         self.runs = 0
         self._lock = threading.RLock()
+
+    def touch(self) -> None:
+        """Stamp client activity — the idle clock the server's
+        ``session_ttl`` eviction sweep reads."""
+        self.last_used = time.time()
 
     @property
     def db(self):
@@ -72,6 +78,7 @@ class TuningSession:
     def ask(self, n: Optional[int] = None) -> List[Dict]:
         with self._lock:
             self._check_open()
+            self.touch()
             return [_json_cfg(c) for c in self.strategy.ask(n)]
 
     def tell(self, configs: Sequence[Dict], values: Sequence[float],
@@ -84,6 +91,7 @@ class TuningSession:
                              f"{len(values)} values")
         with self._lock:
             self._check_open()
+            self.touch()
             cfgs = [dict(c) for c in configs]
             vals = [float(v) for v in values]
             vrs = ([float(v) for v in variances] if variances is not None
@@ -107,6 +115,7 @@ class TuningSession:
         (faster on a busy pool, order-dependent trace)."""
         with self._lock:
             self._check_open()
+            self.touch()
             budget = budget if budget is not None else self.budget
             batch_size = (batch_size if batch_size is not None
                           else self.batch_size)
@@ -120,6 +129,7 @@ class TuningSession:
                 self.strategy, budget=budget, batch_size=batch_size,
                 **kwargs)
             self.runs += 1
+            self.touch()         # a long run is activity up to its end
             return trace
 
     # -- introspection -------------------------------------------------------
@@ -127,6 +137,7 @@ class TuningSession:
     def best(self):
         with self._lock:
             self._check_open()
+            self.touch()
             cfg, val = self.strategy.best()
             return _json_cfg(cfg), float(val)
 
@@ -152,7 +163,8 @@ class TuningSession:
                 "deterministic": self.deterministic, "closed": self.closed,
                 "runs": self.runs, "evaluations": len(self.db),
                 "observations": len(trace.values) if trace else 0,
-                "created_at": self.created_at}
+                "created_at": self.created_at,
+                "last_used": self.last_used}
 
     def close(self):
         with self._lock:

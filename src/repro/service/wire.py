@@ -14,6 +14,9 @@ other sessions).
     GET  /v1/stats                        daemon counters + cache stats
     GET  /v1/sessions                     open sessions
     POST /v1/sessions                     create-session
+         (``transfer_from`` warm-starts a ``transfer_bo`` session from
+         the daemon's own sharded log; ``resume`` reopens an evicted
+         session from its snapshot by id)
     POST /v1/sessions/<id>/ask            {"n": int?}        -> configs
     POST /v1/sessions/<id>/tell           {configs, values, variances?}
     POST /v1/sessions/<id>/run            {budget?, batch_size?, fidelity?}
@@ -223,7 +226,7 @@ class TuningRequestHandler(BaseHTTPRequestHandler):
             raise _ApiError(400, "create-session needs a 'workload'")
         allowed = {"strategy", "budget", "seed", "batch_size",
                    "strategy_kwargs", "replication", "deterministic",
-                   "tag", "state"}
+                   "tag", "state", "transfer_from", "resume"}
         unknown = set(body) - allowed
         if unknown:
             raise _ApiError(400, f"unknown create-session fields "

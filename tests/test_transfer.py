@@ -1,0 +1,437 @@
+"""repro.transfer: corpus assembly over evaluation logs, the ICM
+multi-task GP prior, TransferBOStrategy's warm-start prongs, and the
+load_state space-identity guards the snapshot/resume path leans on.
+
+The empty-corpus identity tests use deterministic objectives: the
+trace-identity contract is about the *strategy's* draws, and an unseeded
+noisy evaluator would feed the two runs different values."""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import gp
+from repro.core.controller import EvalRecord
+from repro.core.space import Knob, Space
+from repro.core.strategy import (BOConfig, BOStrategy, make_strategy,
+                                 strategy_names)
+from repro.transfer import (CorpusMismatch, TaskData, TransferBOStrategy,
+                            TransferCorpus, build_corpus, corpus_from_log,
+                            space_signature)
+
+
+def _space():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+
+
+def _f(c, shift=0.0):
+    return (c["x"] - 0.3) ** 2 + (c["y"] - 0.7) ** 2 + 0.05 + shift
+
+
+def _records(workload, pts, shift=0.0, variance=0.0, status="ok"):
+    return [EvalRecord({"x": float(px), "y": float(py)},
+                       _f({"x": px, "y": py}, shift), 0.0, "t", workload,
+                       "final", status, 1, variance)
+            for px, py in pts]
+
+
+def _grid(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.05, 0.95, size=(n, 2))
+
+
+def _drive(strategy, f):
+    while not strategy.finished:
+        cfgs = strategy.ask()
+        if not cfgs:
+            break
+        strategy.tell(cfgs, [float(f(c)) for c in cfgs])
+    return strategy
+
+
+SMALL_BO = dict(n_init=3, n_iter=3, n_candidates=32, fit_steps=10, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# multi-task GP
+# ---------------------------------------------------------------------------
+
+class TestMultiTaskGP:
+    def _data(self, n=14, seed=0):
+        x = _grid(n, seed).astype(np.float64)
+        y0 = np.array([_f({"x": a, "y": b}) for a, b in x])
+        y1 = y0 + 0.5                       # same landscape, shifted level
+        xx = np.vstack([x, x])
+        yy = np.concatenate([y0, y1])
+        tt = np.concatenate([np.zeros(n, np.int32),
+                             np.ones(n, np.int32)])
+        return xx, yy, tt
+
+    def test_fit_predict_tracks_each_task(self):
+        x, y, t = self._data()
+        st = gp.fit_multitask(x, y, t, steps=80)
+        xq = _grid(6, seed=3).astype(np.float32)
+        mu0, sd0 = gp.predict_multitask(st, xq, task=0)
+        mu1, sd1 = gp.predict_multitask(st, xq, task=1)
+        truth = np.array([_f({"x": a, "y": b}) for a, b in xq])
+        assert np.all(np.asarray(sd0) > 0)
+        # the learned per-task offsets carry the level difference
+        assert np.mean(np.asarray(mu1) - np.asarray(mu0)) > 0.25
+        assert np.mean(np.abs(np.asarray(mu0) - truth)) < 0.2
+
+    def test_stacked_prior_for_unseen_task(self):
+        x, y, t = self._data()
+        st = gp.fit_multitask(x, y, t, steps=80)
+        xq = _grid(5, seed=4).astype(np.float32)
+        mu, sd = gp.predict_multitask(st, xq, task=None)
+        mu0, _ = gp.predict_multitask(st, xq, task=0)
+        mu1, _ = gp.predict_multitask(st, xq, task=1)
+        assert np.all(np.isfinite(np.asarray(mu)))
+        assert np.all(np.asarray(sd) > 0)
+        lo = np.minimum(np.asarray(mu0), np.asarray(mu1)) - 0.2
+        hi = np.maximum(np.asarray(mu0), np.asarray(mu1)) + 0.2
+        assert np.all((np.asarray(mu) >= lo) & (np.asarray(mu) <= hi))
+
+    def test_fit_routes_on_task_column(self):
+        x, y, t = self._data()
+        st = gp.fit(x, y, tasks=t, steps=20, pad=False)
+        assert isinstance(st, gp.MTGPState)
+
+    def test_single_task_fallback_is_exact(self):
+        x = _grid(10).astype(np.float64)
+        y = np.array([_f({"x": a, "y": b}) for a, b in x])
+        plain = gp.fit(x, y, steps=25, pad=False)
+        tasked = gp.fit(x, y, tasks=np.zeros(len(y), np.int32),
+                        steps=25, pad=False)
+        assert isinstance(tasked, gp.GPState)
+        assert np.allclose(np.asarray(plain.alpha),
+                           np.asarray(tasked.alpha))
+
+    def test_multitask_warm_start_needs_mt_params(self):
+        x, y, t = self._data()
+        with pytest.raises(TypeError, match="MTGPParams"):
+            gp.fit(x, y, tasks=t, steps=5, params=gp.init_params(2))
+
+    def test_tasks_row_mismatch(self):
+        x, y, t = self._data()
+        with pytest.raises(ValueError, match="rows"):
+            gp.fit(x, y, tasks=t[:-1], steps=5)
+
+    def test_params_dict_roundtrip(self):
+        p = gp.init_mt_params(3, 2, offsets=np.array([0.1, -0.2]))
+        d = gp.mt_params_to_dict(p)
+        json.dumps(d)                        # wire-serializable
+        q = gp.mt_params_from_dict(d)
+        for a, b in zip(p, q):
+            assert np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_shared_params_projection(self):
+        x, y, t = self._data()
+        st = gp.fit_multitask(x, y, t, steps=20)
+        sp = gp.shared_params(st.params)
+        assert isinstance(sp, gp.GPParams)
+        assert np.allclose(np.asarray(sp.log_lengthscale),
+                           np.asarray(st.params.log_lengthscale))
+
+    def test_heteroscedastic_rows_downweighted(self):
+        x, y, t = self._data(n=10)
+        var = np.zeros(len(y))
+        y_noisy = y.copy()
+        y_noisy[3] += 5.0                    # wild outlier...
+        var[3] = 25.0                        # ...flagged as such
+        st = gp.fit_multitask(x, y_noisy, t, steps=40, obs_var=var)
+        st_trust = gp.fit_multitask(x, y_noisy, t, steps=40)
+        xq = x[3][None].astype(np.float32)
+        mu_down, _ = gp.predict_multitask(st, xq, task=0)
+        mu_trust, _ = gp.predict_multitask(st_trust, xq, task=0)
+        # the flagged fit pulls the outlier's posterior toward the rest
+        assert abs(float(mu_down[0]) - y_noisy[3]) > \
+            abs(float(mu_trust[0]) - y_noisy[3]) - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# corpus assembly
+# ---------------------------------------------------------------------------
+
+class TestCorpusBuild:
+    def test_groups_by_workload(self):
+        recs = (_records("a", _grid(4)) + _records("b", _grid(3), shift=1.0))
+        corpus = build_corpus(_space(), [recs])
+        assert corpus.workloads == ("a", "b")
+        assert len(corpus) == 7 and bool(corpus)
+        a = corpus.tasks[0]
+        assert isinstance(a, TaskData) and len(a) == 4
+        cfg, val = a.best
+        assert val == min(a.values) and _f(cfg) == val
+
+    def test_exclude_and_unstamped(self):
+        recs = (_records("a", _grid(4)) + _records("b", _grid(4))
+                + _records("", _grid(2)))
+        corpus = build_corpus(_space(), [recs], exclude=("b",))
+        assert corpus.workloads == ("a",)
+
+    def test_signature_mismatch_skips_loudly(self):
+        other = Space((Knob("x", "float", 0.5, lo=0.0, hi=2.0),
+                       Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+        assert space_signature(other) != space_signature(_space())
+        recs = _records("a", _grid(4)) + _records("b", _grid(4))
+        with pytest.warns(CorpusMismatch, match="incompatible space"):
+            corpus = build_corpus(_space(), [recs],
+                                  spaces={"a": other})
+        assert corpus.workloads == ("b",)
+
+    def test_declared_matching_space_keeps_task(self):
+        recs = _records("a", _grid(4))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            corpus = build_corpus(_space(), [recs],
+                                  spaces={"a": _space()})
+        assert corpus.workloads == ("a",)
+
+    def test_bad_rows_dropped_with_warning(self):
+        good = _records("a", _grid(4))
+        bad = [EvalRecord({"x": 0.5, "z": 0.5}, 1.0, 0.0, "t", "a"),
+               EvalRecord({"x": 5.0, "y": 0.5}, 1.0, 0.0, "t", "a"),
+               EvalRecord({"x": 0.5, "y": 0.5}, float("nan"), 0.0,
+                          "t", "a"),
+               EvalRecord({"x": 0.5, "y": 0.5}, 1.0, 0.0, "t", "a",
+                          status="failed")]
+        with pytest.warns(CorpusMismatch, match="dropped 2"):
+            corpus = build_corpus(_space(), [good + bad])
+        assert len(corpus.tasks[0]) == 4     # nan/failed skip silently,
+                                             # misfit configs warn
+
+    def test_min_points_drops_thin_tasks(self):
+        recs = _records("a", _grid(4)) + _records("thin", _grid(1))
+        with pytest.warns(CorpusMismatch, match="thin"):
+            corpus = build_corpus(_space(), [recs], min_points=2)
+        assert corpus.workloads == ("a",)
+
+    def test_sources_files_dirs_missing(self, tmp_path):
+        from repro.core.controller import EvalDB
+        db_a = tmp_path / "a.jsonl"
+        db_b = tmp_path / "sub" / "b.jsonl"
+        db_b.parent.mkdir()
+        EvalDB(str(db_a)).append_batch(_records("a", _grid(3)))
+        EvalDB(str(db_b)).append_batch(_records("b", _grid(3)))
+        corpus = build_corpus(_space(), [str(db_a), db_b.parent])
+        assert corpus.workloads == ("a", "b")
+        with pytest.warns(CorpusMismatch, match="does not exist"):
+            empty = build_corpus(_space(), [tmp_path / "nope.jsonl"])
+        assert not empty and empty.n_tasks == 0
+
+    def test_corpus_from_log_object(self):
+        class _Log:
+            records = _records("a", _grid(3))
+        assert corpus_from_log(_space(), _Log()).workloads == ("a",)
+
+    def test_best_configs_interleaves_best_first(self):
+        corpus = build_corpus(_space(), [
+            _records("worse", _grid(3), shift=1.0)
+            + _records("better", _grid(3))])
+        seeds = corpus.best_configs(per_task=2)
+        assert len(seeds) == 4
+        better, worse = corpus.tasks      # sorted: "better" < "worse"
+        assert better.best[1] < worse.best[1]
+        assert seeds[0] == better.best[0]     # overall best leads
+        assert seeds[1] == worse.best[0]      # then the other task's best
+        assert seeds[2] == better.top(2)[1]   # round 2: each task's 2nd
+
+    def test_stacked_log_transform_and_tasks(self):
+        corpus = build_corpus(_space(), [
+            _records("a", _grid(3), variance=0.01)
+            + _records("b", _grid(2), shift=1.0)])
+        x, y, var, t = corpus.stacked(log_objective=True)
+        assert x.shape == (5, 2) and t.tolist() == [0, 0, 0, 1, 1]
+        raw = np.concatenate([corpus.tasks[0].values,
+                              corpus.tasks[1].values])
+        assert np.allclose(y, np.log(raw))
+        assert np.allclose(var[:3], 0.01 / raw[:3] ** 2)   # delta method
+        x2, y2, _, _ = corpus.stacked(log_objective=False)
+        assert np.allclose(y2, raw) and np.allclose(x, x2)
+
+    def test_stacked_max_per_task_keeps_best(self):
+        corpus = build_corpus(_space(), [_records("a", _grid(32))])
+        x, y, _, _ = corpus.stacked(max_per_task=8, seed=1)
+        assert x.shape[0] == 8
+        assert min(y) == pytest.approx(np.log(min(corpus.tasks[0].values)))
+
+    def test_stacked_empty(self):
+        corpus = TransferCorpus(_space(), [])
+        x, y, var, t = corpus.stacked()
+        assert x.shape == (0, 2) and len(y) == len(var) == len(t) == 0
+
+
+# ---------------------------------------------------------------------------
+# TransferBOStrategy
+# ---------------------------------------------------------------------------
+
+class TestTransferBO:
+    def _corpus(self, n_tasks=2, n=10):
+        recs = []
+        for i in range(n_tasks):
+            recs += _records(f"wl{i}", _grid(n, seed=i), shift=0.1 * i)
+        return build_corpus(_space(), [recs])
+
+    def test_empty_corpus_identical_to_plain_bo(self):
+        cfg = BOConfig(**SMALL_BO)
+        plain = _drive(BOStrategy(_space(), cfg), _f)
+        empty = TransferCorpus(_space(), [])
+        xfer = _drive(TransferBOStrategy(_space(), cfg, corpus=empty), _f)
+        assert xfer.trace.configs == plain.trace.configs
+        assert np.allclose(xfer.trace.values, plain.trace.values)
+        none = _drive(TransferBOStrategy(_space(), BOConfig(**SMALL_BO)),
+                      _f)
+        assert none.trace.configs == plain.trace.configs
+
+    def test_corpus_bests_seed_the_design(self):
+        corpus = self._corpus()
+        strat = TransferBOStrategy(_space(), BOConfig(**SMALL_BO),
+                                   corpus=corpus, corpus_fit_steps=20)
+        first = strat.ask()
+        bests = [corpus.tasks[0].best[0], corpus.tasks[1].best[0]]
+        planted = [c for c in first
+                   if any(np.isclose(c["x"], b["x"])
+                          and np.isclose(c["y"], b["y"]) for b in bests)]
+        assert len(planted) >= 1
+
+    def test_pseudo_rows_never_reach_the_trace(self):
+        corpus = self._corpus()
+        strat = TransferBOStrategy(_space(), BOConfig(**SMALL_BO),
+                                   corpus=corpus, corpus_fit_steps=20)
+        assert strat._pseudo_configs          # prior active
+        _drive(strat, _f)
+        budget = SMALL_BO["n_init"] + SMALL_BO["n_iter"]
+        assert len(strat.trace.values) == budget
+        cfgs, vals, vrs = strat._training_data()
+        assert len(cfgs) == budget + len(strat._pseudo_configs)
+        cfg, val = strat.best()
+        assert val == pytest.approx(_f(cfg))  # a real measurement
+
+    def test_pseudo_variance_decays_with_evidence(self):
+        corpus = self._corpus()
+        strat = TransferBOStrategy(_space(), BOConfig(**SMALL_BO),
+                                   corpus=corpus, corpus_fit_steps=20,
+                                   decay_tau=2.0)
+        _, _, before = strat._training_data()
+        cfgs = strat.ask()
+        strat.tell(cfgs, [float(_f(c)) for c in cfgs])
+        _, _, after = strat._training_data()
+        assert after[-1] / before[-1] == pytest.approx(
+            np.exp(len(cfgs) / 2.0))
+
+    def test_prior_params_warm_start_without_cfg_flag(self):
+        corpus = self._corpus()
+        cfg = BOConfig(**SMALL_BO)
+        assert not cfg.warm_start
+        strat = TransferBOStrategy(_space(), cfg, corpus=corpus,
+                                   corpus_fit_steps=20)
+        warm, steps = strat._fit_args()
+        assert warm is strat._params and warm is not None
+        assert steps == cfg.fit_steps
+
+    def test_space_mismatch_raises(self):
+        other = Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                       Knob("z", "float", 0.5, lo=0.0, hi=1.0)))
+        corpus = self._corpus()
+        with pytest.raises(ValueError, match="knob set"):
+            TransferBOStrategy(other, BOConfig(**SMALL_BO), corpus=corpus)
+
+    def test_registry(self):
+        assert "transfer_bo" in strategy_names()
+        corpus = self._corpus()
+        strat = make_strategy("transfer_bo", _space(), budget=6, seed=5,
+                              cfg=BOConfig(**SMALL_BO), corpus=corpus,
+                              corpus_fit_steps=20)
+        assert isinstance(strat, TransferBOStrategy)
+        assert strat.cfg.n_init + strat.cfg.n_iter == 6
+
+    def test_single_task_corpus_prior(self):
+        corpus = self._corpus(n_tasks=1)
+        strat = TransferBOStrategy(_space(), BOConfig(**SMALL_BO),
+                                   corpus=corpus, corpus_fit_steps=20)
+        assert strat._prior is not None and not strat._prior.multitask
+        assert strat._pseudo_configs
+        _drive(strat, _f)
+        assert strat.best()[1] <= _f(strat.trace.configs[0]) + 1e-9
+
+    def test_transfer_finds_optimum_faster_in_design(self):
+        # siblings share the optimum at (0.3, 0.7): the seeded design's
+        # very first wave should already be near it
+        corpus = self._corpus(n_tasks=3, n=24)
+        strat = TransferBOStrategy(_space(), BOConfig(**SMALL_BO),
+                                   corpus=corpus, corpus_fit_steps=20)
+        first = strat.ask()
+        best_seed = min(_f(c) for c in first)
+        corpus_best = min(t.best[1] for t in corpus.tasks)
+        assert best_seed <= corpus_best + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# load_state space-identity guards
+# ---------------------------------------------------------------------------
+
+def _dyn_space():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0,
+                       dynamic_bound=True)))
+
+
+class TestLoadStateGuards:
+    def _snapshot(self, space=None, cfg=None):
+        strat = BOStrategy(space or _space(), cfg or BOConfig(**SMALL_BO))
+        cfgs = strat.ask()
+        strat.tell(cfgs, [float(_f(c)) for c in cfgs])
+        return strat, strat.state_dict()
+
+    def test_roundtrip_restores(self):
+        strat, sd = self._snapshot()
+        twin = BOStrategy(_space(), BOConfig(**SMALL_BO))
+        twin.load_state(sd)
+        assert twin.trace.configs == strat.trace.configs
+        assert np.allclose(twin.trace.values, strat.trace.values)
+
+    def test_knob_renamed_raises(self):
+        _, sd = self._snapshot()
+        renamed = Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                         Knob("y2", "float", 0.5, lo=0.0, hi=1.0)))
+        with pytest.raises(ValueError, match="space mismatch"):
+            BOStrategy(renamed, BOConfig(**SMALL_BO)).load_state(sd)
+
+    def test_base_bounds_widened_raises(self):
+        _, sd = self._snapshot()
+        widened = Space((Knob("x", "float", 0.5, lo=0.0, hi=2.0),
+                         Knob("y", "float", 0.5, lo=0.0, hi=1.0)))
+        with pytest.raises(ValueError, match="base bounds differ"):
+            BOStrategy(widened, BOConfig(**SMALL_BO)).load_state(sd)
+
+    def test_kernel_changed_raises(self):
+        _, sd = self._snapshot()
+        other = BOStrategy(_space(), BOConfig(kernel="rbf", **SMALL_BO))
+        with pytest.raises(ValueError, match="kernel"):
+            other.load_state(sd)
+
+    def test_dynamic_bound_restore_still_works(self):
+        strat = BOStrategy(_dyn_space(), BOConfig(**SMALL_BO))
+        cfgs = strat.ask()
+        strat.tell(cfgs, [float(_f(c)) for c in cfgs])
+        # simulate a boundary expansion having happened
+        k = strat.space.knob("y")
+        from dataclasses import replace as _rp
+        strat.space = strat.space.with_knob(_rp(k, hi=2.0))
+        sd = strat.state_dict()
+        twin = BOStrategy(_dyn_space(), BOConfig(**SMALL_BO))
+        twin.load_state(sd)
+        assert twin.space.knob("y").hi == 2.0     # dynamic state restored
+        assert twin._base_bounds["y"] == (0.0, 1.0)
+
+    def test_legacy_state_without_guards_loads(self):
+        strat, sd = self._snapshot()
+        sd.pop("knobs")
+        sd.pop("base_bounds")
+        twin = BOStrategy(_space(), BOConfig(**SMALL_BO))
+        twin.load_state(sd)                       # backward compatible
+        assert twin.trace.configs == strat.trace.configs

@@ -735,3 +735,266 @@ class TestVarianceWidenedPromotion:
         values, variances = strat.told[0]
         assert values[0] == 1.0 and variances[0] == 0.09
         assert values[1] == 11.05 and variances[1] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# projected probe keys (ROADMAP service rung (d))
+# ---------------------------------------------------------------------------
+
+def _decoy_space():
+    return Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("y", "float", 0.5, lo=0.0, hi=1.0),
+                  Knob("decoy", "int", 0, lo=0, hi=8, inert=True),
+                  Knob("mode", "categorical", "off",
+                       choices=("off", "on")),
+                  Knob("depth", "int", 2, lo=1, hi=4,
+                       gated_by=("mode", ("on",)))))
+
+
+class TestProjectedProbeKeys:
+    def test_inert_and_gated_off_knobs_dropped(self):
+        sp = _decoy_space()
+        base = {"x": 0.25, "y": 0.5, "mode": "off", "depth": 3}
+        a = EvalRequest({**base, "decoy": 1}, workload="w", seed=7)
+        b = EvalRequest({**base, "decoy": 6, "depth": 1},
+                        workload="w", seed=7)
+        assert probe_key(a) != probe_key(b)          # raw keys differ
+        assert probe_key(a, sp) == probe_key(b, sp)  # projected collide
+        # gate open: depth is live again and must key
+        on3 = EvalRequest({**base, "decoy": 0, "mode": "on", "depth": 3},
+                          workload="w", seed=7)
+        on4 = EvalRequest({**base, "decoy": 0, "mode": "on", "depth": 4},
+                          workload="w", seed=7)
+        assert probe_key(on3, sp) != probe_key(on4, sp)
+        assert probe_key(on3, sp) != probe_key(a, sp)
+        # unseeded probes stay uncacheable, space or not
+        assert probe_key(EvalRequest({**base, "decoy": 1},
+                                     workload="w"), sp) is None
+
+    def test_pool_cache_hit_across_inert_variants(self):
+        """The regression: two sessions probing configs that differ only
+        in an inert decoy knob must share one measurement once the
+        workload's space is registered."""
+        backend = SeededQuad()
+        pool = SharedEvaluationPool({"wl": backend}, max_workers=2)
+        pool.register_space("wl", _decoy_space())
+        v1, v2 = pool.view(), pool.view()
+        cfg = {"x": 0.2, "y": 0.9, "mode": "off", "depth": 3}
+        (t1,) = v1.submit([EvalRequest({**cfg, "decoy": 1},
+                                       workload="wl", seed=11)])
+        (r1,) = v1.gather([t1])
+        (t2,) = v2.submit([EvalRequest({**cfg, "decoy": 7, "depth": 1},
+                                       workload="wl", seed=11)])
+        (r2,) = v2.gather([t2])
+        assert r1.ok and r2.ok and r1.value == r2.value
+        assert backend.calls == 1
+        assert pool.cache.stats["hits_completed"] == 1
+        pool.close()
+
+    def test_without_space_variants_remeasure(self):
+        backend = SeededQuad()
+        pool = SharedEvaluationPool({"wl": backend}, max_workers=2)
+        v = pool.view()
+        cfg = {"x": 0.2, "y": 0.9, "mode": "off", "depth": 3}
+        for decoy in (1, 7):
+            (t,) = v.submit([EvalRequest({**cfg, "decoy": decoy},
+                                         workload="wl", seed=11)])
+            v.gather([t])
+        assert backend.calls == 2
+        pool.close()
+
+    def test_server_registers_space_on_resolve(self):
+        with _server() as srv:
+            srv.create_session("quad", strategy="random", budget=4)
+            assert "quad" in srv.pool.spaces
+
+
+# ---------------------------------------------------------------------------
+# idle-session eviction + snapshot/resume
+# ---------------------------------------------------------------------------
+
+class TestSessionEviction:
+    def test_no_ttl_never_evicts(self):
+        import time as _time
+        with _server() as srv:
+            srv.create_session("quad", strategy="random", budget=4)
+            assert srv.evict_idle(now=_time.time() + 1e9) == []
+            assert srv.stats()["sessions_open"] == 1
+
+    def test_idle_eviction_snapshots_and_resumes(self, tmp_path):
+        import time as _time
+        with _server(db_root=str(tmp_path), session_ttl=60.0) as srv:
+            sess = srv.create_session("quad", budget=8, seed=2,
+                                      strategy_kwargs=BO_KW)
+            sid = sess.session_id
+            cfgs = sess.ask(2)
+            sess.tell(cfgs, [1.0, 2.0])
+            best = sess.best()
+            assert srv.evict_idle(now=_time.time() + 3600) == [sid]
+            assert sess.closed
+            with pytest.raises(KeyError, match=sid):
+                srv.session(sid)
+            stats = srv.stats()
+            assert stats["sessions_evicted"] == 1
+            assert stats["sessions_open"] == 0
+            assert (tmp_path / "sessions" / f"{sid}.json").exists()
+            resumed = srv.create_session("quad", budget=8, seed=2,
+                                         strategy_kwargs=BO_KW,
+                                         resume=sid)
+            assert resumed.session_id != sid
+            assert resumed.best() == best
+            assert len(resumed.strategy.trace.values) == 2
+
+    def test_entrypoint_sweep_is_lazy(self):
+        with _server(session_ttl=60.0) as srv:
+            sess = srv.create_session("quad", strategy="random", budget=4)
+            sid = sess.session_id
+            assert srv.list_sessions()          # fresh: survives the sweep
+            sess.last_used -= 3600              # backdate: now idle
+            with pytest.raises(KeyError):
+                srv.session(sid)                # the lookup itself sweeps
+            assert srv.list_sessions() == []
+
+    def test_activity_resets_the_idle_clock(self):
+        import time as _time
+        with _server(session_ttl=60.0) as srv:
+            sess = srv.create_session("quad", strategy="random", budget=8)
+            sess.last_used -= 50                # idle, but under the ttl
+            cfgs = sess.ask(1)                  # activity touches
+            sess.tell(cfgs, [1.0])
+            assert _time.time() - sess.last_used < 5
+            assert srv.evict_idle() == []
+
+    def test_resume_guards(self, tmp_path):
+        import time as _time
+        with _server(db_root=str(tmp_path), session_ttl=60.0) as srv:
+            sess = srv.create_session("quad", budget=8, seed=2,
+                                      strategy_kwargs=BO_KW)
+            sid = sess.session_id
+            sess.tell([{"x": 0.1, "y": 0.2}], [1.0])
+            srv.evict_idle(now=_time.time() + 3600)
+            with pytest.raises(KeyError, match="no session snapshot"):
+                srv.create_session("quad", resume="s9999")
+            with pytest.raises(ValueError, match="not both"):
+                srv.create_session("quad", strategy_kwargs=BO_KW,
+                                   resume=sid, state={"version": 1})
+            with pytest.raises(ValueError, match="belongs to workload"):
+                srv.create_session("quad2", strategy_kwargs=BO_KW,
+                                   resume=sid)
+
+    def test_resume_from_disk_across_restarts(self, tmp_path):
+        import time as _time
+        with _server(db_root=str(tmp_path), session_ttl=60.0) as srv:
+            sess = srv.create_session("quad", budget=8, seed=2,
+                                      strategy_kwargs=BO_KW)
+            sid = sess.session_id
+            sess.tell([{"x": 0.1, "y": 0.2}], [3.5])
+            srv.evict_idle(now=_time.time() + 3600)
+        # a brand-new daemon over the same log root: memory snapshots
+        # are gone, the file one is found
+        with _server(db_root=str(tmp_path)) as srv2:
+            resumed = srv2.create_session("quad", budget=8, seed=2,
+                                          strategy_kwargs=BO_KW,
+                                          resume=sid)
+            assert resumed.best() == ({"x": 0.1, "y": 0.2}, 3.5)
+
+
+# ---------------------------------------------------------------------------
+# transfer_from: warm starts mined from the daemon's own log
+# ---------------------------------------------------------------------------
+
+class TestTransferFrom:
+    def test_mines_sibling_workload_logs(self):
+        from repro.transfer import TransferBOStrategy
+        with _server() as srv:
+            donor = srv.create_session("quad", budget=6, seed=3,
+                                       strategy_kwargs=BO_KW)
+            donor.run()
+            sess = srv.create_session("quad2", strategy="transfer_bo",
+                                      budget=6, seed=3,
+                                      strategy_kwargs=BO_KW,
+                                      transfer_from=True)
+            strat = sess.strategy
+            assert isinstance(strat, TransferBOStrategy)
+            assert strat._prior is not None       # quad's 6 rows fed it
+            trace = sess.run()
+            assert len(trace.values) == 6
+
+    def test_own_workload_always_excluded(self):
+        with _server() as srv:
+            donor = srv.create_session("quad", budget=6, seed=3,
+                                       strategy_kwargs=BO_KW)
+            donor.run()
+            sess = srv.create_session("quad", strategy="transfer_bo",
+                                      budget=6, seed=4,
+                                      strategy_kwargs=BO_KW,
+                                      transfer_from=True)
+            assert sess.strategy._prior is None   # only donor was itself
+
+    def test_empty_log_degrades_to_plain_bo(self):
+        with _server() as srv:
+            sess = srv.create_session("quad", strategy="transfer_bo",
+                                      budget=6, seed=3,
+                                      strategy_kwargs=BO_KW,
+                                      transfer_from=True)
+            assert sess.strategy._prior is None
+            assert len(sess.run().values) == 6
+
+    def test_unknown_spec_field_rejected(self):
+        with _server() as srv:
+            with pytest.raises(ValueError, match="unknown fields"):
+                srv.create_session("quad", strategy="transfer_bo",
+                                   strategy_kwargs=BO_KW,
+                                   transfer_from={"nope": 1})
+
+    def test_workload_narrowing(self):
+        with _server() as srv:
+            for wl in ("quad", "quad2"):
+                srv.create_session(wl, budget=6, seed=3,
+                                   strategy_kwargs=BO_KW).run()
+            sess = srv.create_session(
+                "quad", strategy="transfer_bo", budget=6, seed=4,
+                strategy_kwargs=BO_KW,
+                transfer_from={"workloads": ["quad"]})
+            assert sess.strategy._prior is None   # narrowed to self only
+            sess2 = srv.create_session(
+                "quad", strategy="transfer_bo", budget=6, seed=4,
+                strategy_kwargs=BO_KW,
+                transfer_from={"workloads": ["quad2"]})
+            assert sess2.strategy._prior is not None
+
+    def test_wire_transfer_and_resume(self):
+        import time as _time
+        srv = _server(session_ttl=600.0)
+        httpd, _ = serve_background(srv)
+        host, port = httpd.server_address[:2]
+        client = TuningClient(f"http://{host}:{port}")
+        try:
+            client.create_session("quad", budget=6, seed=3,
+                                  strategy_kwargs=BO_KW).run()
+            sess = client.create_session("quad2", strategy="transfer_bo",
+                                         budget=6, seed=3,
+                                         strategy_kwargs=BO_KW,
+                                         transfer_from=True)
+            out = sess.run()
+            assert out["n_evaluations"] == 6
+            sid = sess.session_id
+            srv.evict_idle(now=_time.time() + 3600)
+            with pytest.raises(TuningServiceError) as ei:
+                sess.best()
+            assert ei.value.status == 404        # evicted = gone
+            resumed = client.create_session("quad2",
+                                            strategy="transfer_bo",
+                                            budget=6, seed=3,
+                                            strategy_kwargs=BO_KW,
+                                            resume=sid)
+            _, val = resumed.best()
+            assert val == out["best_value"]
+            with pytest.raises(TuningServiceError) as ei:
+                client.create_session("quad", strategy="transfer_bo",
+                                      strategy_kwargs=BO_KW,
+                                      transfer_from={"nope": 1})
+            assert ei.value.status == 400
+        finally:
+            httpd.shutdown()
+            srv.close()
