@@ -1,0 +1,218 @@
+"""Chaos gate: seeded fault injection over the worker-pool service.
+
+    PYTHONPATH=src python -m benchmarks.perf_chaos [--tiny]
+
+Real benchmark clusters flake: workers die mid-probe, benchmarks hang,
+transient I/O errors surface as failed measurements.  The resilience
+layer (``RetryPolicy`` + ``ResilientService``) is supposed to make the
+tuning loop *indifferent* to transient faults — same search trajectory,
+same best-found config, bounded extra wall-clock — and the seeded chaos
+harness (``FaultPlan`` + ``FaultInjectingService``) is how we prove it
+without a flaky cluster: every fault is a deterministic function of
+(plan seed, request seed, occurrence), so a chaotic run is exactly
+replayable.
+
+Both arms run the identical BO probe schedule against the analytic
+evaluator behind a real ``WorkerPoolEvaluationService``; the chaotic arm
+injects a **20 % transient-fault rate** (plus worker deaths) between the
+controller and the workers.  Three hard gates, asserted in ``--tiny``
+(CI) too:
+
+* **bit-identity** — on a single-worker barrier cadence the chaotic
+  trace equals the fault-free trace *bit for bit* at equal seeds
+  (injected faults never touch the backend, retries reuse the original
+  measurement seed, ``n_evaluations`` never inflates);
+* **convergence** — on the multi-worker pool the chaotic arm's
+  best-found true step time matches the fault-free arm within
+  ``QUALITY_TOL`` (noise tolerance);
+* **wall-clock** — the chaotic arm finishes within ``WALL_GATE`` ×
+  the fault-free arm (retried transients cost dispatch overhead, not
+  repeated benchmark runs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.configs import get_config
+from repro.core.controller import Controller, EvalDB
+from repro.core.costmodel import SINGLE_POD
+from repro.core.evaluators import AnalyticEvaluator
+from repro.core.faults import FaultInjectingService, FaultPlan
+from repro.core.knobs import clean_space
+from repro.core.resilience import RetryPolicy
+from repro.core.service import WorkerPoolEvaluationService
+from repro.core.strategy import BOConfig, make_strategy
+
+NOISE_SIGMA = 0.02       # multiplicative measurement noise (paper: 2.5 %)
+TRANSIENT_RATE = 0.2     # the ISSUE's 20 % injected transient-fault rate
+DEATH_RATE = 0.05        # plus occasional worker deaths
+WALL_GATE = 1.3          # chaotic wall-clock <= 1.3x fault-free
+QUALITY_TOL = 1.05       # chaotic best-found true step within 5 % of clean
+LATENCY_S = 0.02         # per-probe benchmark latency (makes wall real)
+
+
+class SeededBench:
+    """Seed-deterministic noisy benchmark over the analytic evaluator:
+    the measured value depends only on (config, request.seed), so a
+    retried probe reproducing the original seed reproduces the original
+    measurement — the property the bit-identity gate rests on."""
+
+    wants_request = True
+
+    def __init__(self, model_cfg, cell, latency_s: float = 0.0):
+        self.ev = AnalyticEvaluator(model_cfg, cell, noise_sigma=0.0)
+        self.latency_s = latency_s
+        self.calls = 0
+        self._lock = threading.Lock()
+
+    def __call__(self, cfg, request=None):
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        with self._lock:
+            self.calls += 1
+        seed = 0 if request is None or request.seed is None \
+            else request.seed
+        rng = np.random.default_rng(seed)
+        return self.ev.true_step(cfg) * (
+            1.0 + NOISE_SIGMA * rng.standard_normal())
+
+    def true_step(self, cfg):
+        return self.ev.true_step(cfg)
+
+
+def _arm(space, model_cfg, cell, plan, probes, seed, workers,
+         latency_s=LATENCY_S):
+    """One tuning run behind a worker pool, optionally under a chaos
+    plan.  Returns (trace values, best true step, wall seconds, stats)."""
+    bench = SeededBench(model_cfg, cell, latency_s=latency_s)
+    inner = WorkerPoolEvaluationService(bench, max_workers=workers)
+    svc = inner if plan is None else FaultInjectingService(inner, plan)
+    ctrl = Controller(svc, EvalDB(), tag="chaos", seed=seed,
+                      resilience=RetryPolicy(max_attempts=8,
+                                             backoff_s=0.0))
+    n_init = max(probes // 2, 6)
+    strat = make_strategy("bo", space, budget=probes, seed=seed,
+                          cfg=BOConfig(n_init=n_init,
+                                       n_iter=probes - n_init,
+                                       fit_steps=30))
+    width = 4
+    t0 = time.monotonic()
+    # barrier cadence: whole waves in, whole waves told — the replayable
+    # schedule (and on one worker, a fully deterministic one)
+    trace = ctrl.run_async(strat, batch_size=width, max_in_flight=width,
+                           min_ask=width)
+    wall = time.monotonic() - t0
+    best_cfg, _ = trace.best
+    resilient = ctrl.service                    # ResilientService
+    stats = {"backend_calls": bench.calls,
+             "retries": getattr(resilient, "retries", 0),
+             "exhausted": getattr(resilient, "exhausted", 0),
+             "injected": dict(getattr(svc, "injected", {})),
+             "n_evaluations": len(trace.values)}
+    try:
+        return list(trace.values), bench.true_step(best_cfg), wall, stats
+    finally:
+        svc.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="one seed, smaller probe budget (CI smoke; all "
+                         "three chaos gates are asserted here too)")
+    args = ap.parse_args(argv)
+
+    probes = 16 if args.tiny else 24
+    seeds = (0,) if args.tiny else (0, 1, 2)
+
+    model_cfg = get_config("yi-6b")
+    cell = None
+    from repro.models.config import SHAPES_BY_NAME
+    cell = SHAPES_BY_NAME["train_4k"]
+    space, _, _ = clean_space(model_cfg, cell, SINGLE_POD)
+
+    plan = FaultPlan(transient_rate=TRANSIENT_RATE, death_rate=DEATH_RATE,
+                     seed=11)
+
+    rows = []
+    for seed in seeds:
+        # -- bit-identity: single worker, deterministic barrier ---------
+        clean_tr, _, _, _ = _arm(space, model_cfg, cell, None, probes,
+                                 seed, workers=1, latency_s=0.0)
+        chaos_tr, _, _, cs = _arm(space, model_cfg, cell, plan, probes,
+                                  seed, workers=1, latency_s=0.0)
+        bit_identical = clean_tr == chaos_tr
+        # -- convergence + wall-clock: the real multi-worker pool -------
+        _, f_best, f_wall, f_stats = _arm(space, model_cfg, cell, None,
+                                          probes, seed, workers=4)
+        _, c_best, c_wall, c_stats = _arm(space, model_cfg, cell, plan,
+                                          probes, seed, workers=4)
+        ratio = c_wall / f_wall
+        quality = c_best / f_best
+        rows.append({"seed": seed, "probes": probes,
+                     "bit_identical": bit_identical,
+                     "clean_best": f_best, "chaos_best": c_best,
+                     "quality_ratio": quality,
+                     "clean_wall_s": f_wall, "chaos_wall_s": c_wall,
+                     "wall_ratio": ratio,
+                     "injected": c_stats["injected"],
+                     "retries": c_stats["retries"],
+                     "backend_calls": c_stats["backend_calls"]})
+        print(f"seed {seed}: bit-identical={bit_identical} | clean best "
+              f"{f_best:.4f}s vs chaos {c_best:.4f}s "
+              f"(x{quality:.3f}) | wall x{ratio:.2f} | injected "
+              f"{c_stats['injected']} retries {c_stats['retries']}",
+              flush=True)
+
+        # the chaos machinery actually fired, and the budget held
+        assert sum(cs["injected"].values()) > 0, "no faults injected"
+        assert cs["retries"] > 0, "no retries exercised"
+        assert cs["n_evaluations"] == probes, (
+            f"retries inflated n_evaluations: {cs['n_evaluations']} "
+            f"!= {probes}")
+        # injected faults never touch the backend: chaotic backend
+        # effort equals the probe count exactly (successful attempts)
+        assert cs["backend_calls"] == probes
+
+    worst_quality = max(r["quality_ratio"] for r in rows)
+    worst_wall = max(r["wall_ratio"] for r in rows)
+    all_bit = all(r["bit_identical"] for r in rows)
+    print(f"\nbit-identity {all_bit}, worst quality ratio "
+          f"{worst_quality:.4f} (gate <= {QUALITY_TOL}), worst wall "
+          f"ratio {worst_wall:.2f} (gate <= {WALL_GATE})")
+
+    save("perf_chaos", {
+        "transient_rate": TRANSIENT_RATE, "death_rate": DEATH_RATE,
+        "noise_sigma": NOISE_SIGMA, "wall_gate": WALL_GATE,
+        "quality_tol": QUALITY_TOL, "bit_identical": all_bit,
+        "worst_quality_ratio": worst_quality,
+        "worst_wall_ratio": worst_wall, "runs": rows})
+
+    assert all_bit, (
+        "chaotic trace diverged from the fault-free trace at equal "
+        "seeds — retries are not replaying the original measurements")
+    assert worst_quality <= QUALITY_TOL, (
+        f"chaotic best-found is {worst_quality:.4f}x the fault-free "
+        f"arm's (gate: <= {QUALITY_TOL})")
+    assert worst_wall <= WALL_GATE, (
+        f"chaotic wall-clock is {worst_wall:.2f}x the fault-free arm's "
+        f"(gate: <= {WALL_GATE})")
+    print(f"gates passed: {TRANSIENT_RATE:.0%} transient faults cost "
+          f"x{worst_wall:.2f} wall-clock and changed nothing else")
+    return 0
+
+
+def run(quick: bool = False):
+    """benchmarks.run entry point."""
+    main(["--tiny"] if quick else [])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ One module per paper table/figure (DESIGN.md §7):
   perf_replication  adaptive vs fixed-k replicated measurements budget
   perf_tuning_service  concurrent sessions sharing one evaluation pool
   perf_transfer  leave-one-workload-out meta-learned priors over the zoo
+  perf_chaos  seeded fault injection: resilient tuning under 20 % faults
 
 ``--json [PATH]`` writes per-benchmark wall-clock timings and statuses to
 an artifacts JSON (default artifacts/bench/run_timings.json) so the perf
@@ -34,9 +35,10 @@ from benchmarks import (fig2b_response_surface, fig4_dynamic_boundary,
                         fig5_effectiveness, fig5b_compiled_transfer,
                         fig6_ranking, fig7_topk_efficiency,
                         fig8_two_fidelity, perf_async_service,
-                        perf_batch_pipeline, perf_gp_ask, perf_multi_device,
-                        perf_replication, perf_transfer, perf_tuning_service,
-                        roofline_table, sec34_optimizers, table2_top16)
+                        perf_batch_pipeline, perf_chaos, perf_gp_ask,
+                        perf_multi_device, perf_replication, perf_transfer,
+                        perf_tuning_service, roofline_table,
+                        sec34_optimizers, table2_top16)
 
 MODULES = [
     ("fig2b_response_surface", fig2b_response_surface),
@@ -56,6 +58,7 @@ MODULES = [
     ("perf_replication", perf_replication),
     ("perf_tuning_service", perf_tuning_service),
     ("perf_transfer", perf_transfer),
+    ("perf_chaos", perf_chaos),
 ]
 
 

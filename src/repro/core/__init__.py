@@ -17,8 +17,17 @@ Public API:
                                    successive halving)
     Sapphire(...).tune()          (Fig 3 — repro.core.tuner; rank ->
                                    search -> validate stages)
+    RetryPolicy / ResilientService / CircuitBreaker / FaultPlan /
+    FaultInjectingService         (repro.core.resilience, .faults; the
+                                   fault-tolerant evaluation layer and
+                                   the seeded chaos harness that tests it)
 """
 
+from repro.core.faults import (FaultInjectingService,  # noqa: F401
+                               FaultPlan)
+from repro.core.resilience import (CircuitBreaker,  # noqa: F401
+                                   ResilientService, RetryPolicy,
+                                   TransientEvalError, classify_failure)
 from repro.core.service import (CallableServiceAdapter,  # noqa: F401
                                 EvalRequest, EvalResult, EvalTicket,
                                 EvaluationService, FidelityRouter,

@@ -48,6 +48,7 @@ except ImportError:       # pragma: no cover - non-POSIX hosts
 
 from repro.core.replication import AdaptiveRacer, ReplicationPolicy, \
     ReplicatingService
+from repro.core.resilience import ResilientService, RetryPolicy
 from repro.core.service import (DEFAULT_FIDELITY, EvalRequest, EvalResult,
                                 EvaluationService, as_service, fold_seed)
 from repro.core.space import Config, Space
@@ -123,6 +124,8 @@ class EvalDB:
         self.records: List[EvalRecord] = []
         self._lock = threading.Lock()
         if self.path and self.path.exists():
+            self._heal_tail()
+        if self.path and self.path.exists():
             for i, line in enumerate(self.path.read_text().splitlines()):
                 if not line.strip():
                     continue
@@ -146,6 +149,42 @@ class EvalDB:
                                   f"of {self.path}")
                     continue
                 self.records.append(rec)
+
+    def _heal_tail(self):
+        """Crash-truncation self-heal: a writer killed mid-append leaves a
+        partial trailing JSONL line, which used to be "corrupt, skipped
+        with warning" on *every* subsequent load, forever.  On load,
+        inspect the tail under the same advisory file lock appends take:
+        a parseable final line merely missing its newline gets one
+        appended; an unparseable fragment is moved to ``<path>.quarantine``
+        (preserved for forensics, never silently discarded) and the log
+        truncated back to its last complete line — so a shared log
+        self-heals once instead of warning forever, and the next append
+        starts on a clean line boundary instead of extending the torn
+        one into a second corrupt record."""
+        with self.path.open("r+b") as f:
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            data = f.read()
+            if not data or data.endswith(b"\n"):
+                return
+            cut = data.rfind(b"\n") + 1          # 0 if no newline at all
+            tail = data[cut:]
+            try:
+                json.loads(tail.decode("utf-8"))
+                # complete record, torn newline (killed between write and
+                # flush of the terminator): finish the line in place
+                f.write(b"\n")
+                return
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                pass
+            quarantine = self.path.with_name(self.path.name + ".quarantine")
+            with quarantine.open("ab") as q:
+                q.write(tail + b"\n")
+            f.truncate(cut)
+            warnings.warn(
+                f"EvalDB: quarantined {len(tail)}-byte torn tail of "
+                f"{self.path} (crashed writer) to {quarantine}")
 
     @staticmethod
     def _sanitize(rec: EvalRecord) -> EvalRecord:
@@ -287,12 +326,20 @@ class Controller:
     workload: str = ""
     replication: Optional[ReplicationPolicy] = None
     seed: Optional[int] = None
+    resilience: Optional[RetryPolicy] = None
 
     @property
     def service(self) -> EvaluationService:
         svc = getattr(self, "_service", None)
         if svc is None:
             svc = as_service(self.evaluate)
+            if self.resilience is not None and self.resilience.active:
+                # retries live BELOW replication: each sub-repeat retries
+                # independently, the Chan merge only ever sees settled
+                # repeats, and a retried probe completes its one outer
+                # ticket exactly once — so n_evaluations (and the budget
+                # the strategy was told) never inflate under faults
+                svc = ResilientService(svc, self.resilience)
             if self.replication is not None and self.replication.active:
                 svc = ReplicatingService(
                     svc, n_repeats=self.replication.initial_repeats,
@@ -303,7 +350,8 @@ class Controller:
     def _derive(self, **changes) -> "Controller":
         kw = {"evaluate": self.evaluate, "db": self.db, "tag": self.tag,
               "prepare": self.prepare, "workload": self.workload,
-              "replication": self.replication, "seed": self.seed}
+              "replication": self.replication, "seed": self.seed,
+              "resilience": self.resilience}
         kw.update(changes)
         c = Controller(**kw)
         # resolve eagerly so every derivative shares THIS controller's
@@ -328,7 +376,19 @@ class Controller:
         underlying backend object is still the same one)."""
         kw = {"evaluate": self.evaluate, "db": self.db, "tag": self.tag,
               "prepare": self.prepare, "workload": self.workload,
-              "replication": policy, "seed": self.seed}
+              "replication": policy, "seed": self.seed,
+              "resilience": self.resilience}
+        return Controller(**kw)
+
+    def with_resilience(self, policy: RetryPolicy) -> "Controller":
+        """Derivative with retried evaluation.  Like
+        :meth:`with_replication`, the service is NOT shared: the policy
+        decides how the backend wraps, so the derivative resolves its
+        own stack (same backend object underneath)."""
+        kw = {"evaluate": self.evaluate, "db": self.db, "tag": self.tag,
+              "prepare": self.prepare, "workload": self.workload,
+              "replication": self.replication, "seed": self.seed,
+              "resilience": policy}
         return Controller(**kw)
 
     # ---- synchronous evaluation ---------------------------------------------

@@ -125,6 +125,17 @@ class EvalResult:
     variance: float = 0.0
     repeats: int = 1
     failures: int = 0
+    # failure classification (repro.core.resilience): ``"transient"`` —
+    # the measurement infrastructure flaked (worker death, timeout,
+    # connection reset; retrying the same probe may succeed) vs
+    # ``"permanent"`` — the config itself is broken (an infeasible row).
+    # ``""`` means unclassified: raw backend failures leave it empty and
+    # the resilience layer stamps it after classifying.  Ok results keep
+    # the default.
+    error_kind: str = ""
+    # how many attempts a ResilientService spent on this request (1 =
+    # first try succeeded / no resilience layer in the path)
+    attempts: int = 1
 
     @property
     def ok(self) -> bool:
@@ -197,11 +208,18 @@ class _ServiceBase:
 
     def _complete(self, result: EvalResult):
         with self._cv:
-            self._inflight.discard(result.ticket.uid)
+            uid = result.ticket.uid
+            if uid not in self._inflight:
+                # late or duplicate completion: the ticket already settled
+                # (a hung-probe watchdog fired first, a chaos harness
+                # injected a duplicate) — exactly-once delivery is this
+                # store's contract, so the straggler is dropped here
+                return
+            self._inflight.discard(uid)
             sink = self._sink
             if sink is None:
-                self._done[result.ticket.uid] = result
-                self._order.append(result.ticket.uid)
+                self._done[uid] = result
+                self._order.append(uid)
             self._cv.notify_all()
         if sink is not None:
             sink(result)                    # routed (FidelityRouter)
@@ -439,14 +457,28 @@ class WorkerPoolEvaluationService(_BackendService):
     order* as they finish.  The compile path releases the GIL inside XLA,
     so distinct configs genuinely overlap; a worker that raises delivers a
     failed result, never an exception.  ``close()`` (or use as a context
-    manager) shuts the pool down."""
+    manager) shuts the pool down.
+
+    ``deadline_s`` arms the hung-probe watchdog: a ticket whose worker has
+    not completed within that many seconds is completed *by the watchdog*
+    as a failed-transient result (``error_kind="transient"``) so
+    ``gather``/``drain`` terminate instead of wedging behind one stuck
+    benchmark.  The worker thread itself cannot be killed (Python threads
+    are uninterruptible) — when it eventually finishes, its late result is
+    dropped by the completion store's exactly-once guard — so a hung
+    backend still occupies a pool slot until it returns; the watchdog
+    bounds the *driver's* wait, not the worker's."""
 
     def __init__(self, backends: Backends, max_workers: int = 4,
-                 default_fidelity: str = DEFAULT_FIDELITY):
+                 default_fidelity: str = DEFAULT_FIDELITY,
+                 deadline_s: Optional[float] = None):
         super().__init__(backends, default_fidelity)
         self.max_workers = max_workers
+        self.deadline_s = deadline_s
+        self.timed_out = 0              # watchdog-expired tickets (stats)
         self._pool = None
         self._pool_lock = threading.Lock()
+        self._watchdogs: Dict[int, threading.Timer] = {}
 
     def _ensure_pool(self):
         from concurrent.futures import ThreadPoolExecutor
@@ -458,12 +490,44 @@ class WorkerPoolEvaluationService(_BackendService):
 
     def _dispatch(self, tickets: Sequence[EvalTicket]) -> None:
         for t in tickets:
+            if self.deadline_s is not None:
+                timer = threading.Timer(self.deadline_s, self._expire, (t,))
+                timer.daemon = True
+                with self._pool_lock:
+                    self._watchdogs[t.uid] = timer
+                timer.start()
             try:
                 self._ensure_pool().submit(self._work, t)
             except RuntimeError as e:
                 # racing close(): a ticket is never orphaned — gather/
                 # drain on it must terminate, so it completes as failed
+                self._cancel_watchdog(t.uid)
                 self._complete(_result(t, _failed(e), 0.0))
+
+    def _cancel_watchdog(self, uid: int) -> None:
+        with self._pool_lock:
+            timer = self._watchdogs.pop(uid, None)
+        if timer is not None:
+            timer.cancel()
+
+    def _expire(self, ticket: EvalTicket):
+        """Watchdog fired: the worker exceeded its deadline.  Complete
+        the ticket as failed-transient (a hang is an infrastructure
+        fault, not evidence the config is bad) — unless the worker beat
+        the timer, in which case ``_complete`` drops this as a dup."""
+        with self._pool_lock:
+            self._watchdogs.pop(ticket.uid, None)
+        with self._cv:
+            live = ticket.uid in self._inflight
+        if not live:
+            return
+        self.timed_out += 1
+        err = TimeoutError(
+            f"probe exceeded its {self.deadline_s}s deadline "
+            "(hung worker?)")
+        self._complete(replace(
+            _result(ticket, _failed(err), float(self.deadline_s or 0.0)),
+            error_kind="transient"))
 
     def _work(self, ticket: EvalTicket):
         t0 = time.monotonic()
@@ -473,11 +537,16 @@ class WorkerPoolEvaluationService(_BackendService):
                                 ticket.request)
         except Exception as e:              # _backend KeyError and the like
             scored = _failed(e)
+        self._cancel_watchdog(ticket.uid)
         self._complete(_result(ticket, scored, time.monotonic() - t0))
 
     def close(self):
         with self._pool_lock:
             pool, self._pool = self._pool, None
+            watchdogs = list(self._watchdogs.values())
+            self._watchdogs.clear()
+        for timer in watchdogs:
+            timer.cancel()
         if pool is not None:
             pool.shutdown(wait=True)
 
@@ -557,8 +626,10 @@ def as_service(obj) -> EvaluationService:
     if isinstance(obj, EvaluationService):
         return obj
     if getattr(obj, "service_kind", "immediate") == "pool":
+        deadline = getattr(obj, "deadline_s", None)
         return WorkerPoolEvaluationService(
-            obj, max_workers=int(getattr(obj, "max_workers", 4)))
+            obj, max_workers=int(getattr(obj, "max_workers", 4)),
+            deadline_s=None if deadline is None else float(deadline))
     if not callable(obj) and not hasattr(obj, "evaluate_batch"):
         raise TypeError(f"cannot adapt {type(obj).__name__} into an "
                         "EvaluationService (not callable, no evaluate_batch, "

@@ -23,6 +23,7 @@ status and the server's message.
 from __future__ import annotations
 
 import json
+import time
 import urllib.error
 import urllib.request
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -32,16 +33,42 @@ from repro.service.wire import space_from_json
 
 
 class TuningServiceError(RuntimeError):
+    """``status`` is the HTTP status the server replied with, or 0 for a
+    transport-level failure (connection refused/reset, timeout) where no
+    server reply exists — for a non-idempotent verb that means the server
+    *may or may not* have applied the request."""
+
     def __init__(self, status: int, message: str):
         super().__init__(f"[{status}] {message}")
         self.status = status
         self.message = message
 
 
+# verbs safe to resend on a transport failure: every GET (pure reads)
+# plus POST ask — a lost ask response leaves at most an untold batch
+# behind, which the strategy's budget accounting already tolerates.
+# tell / create-session / run / close are NOT safe: resending a tell the
+# server already applied double-counts observations, and a second
+# create-session opens a second session.
+def _idempotent(method: str, path: str) -> bool:
+    return method == "GET" or path.endswith("/ask")
+
+
 class TuningClient:
-    def __init__(self, base_url: str, timeout: float = 600.0):
+    """``retries``/``retry_backoff_s`` bound the transport-retry loop on
+    idempotent verbs (see :func:`_idempotent`): ``retries`` is the number
+    of *re*-sends after the first attempt, each preceded by an
+    exponentially growing ``retry_backoff_s * 2**i`` sleep.  Server-side
+    errors (any HTTP reply, 4xx/5xx) are never retried — the server
+    spoke; transport failures on non-idempotent verbs raise immediately
+    with status 0 and a message saying the outcome is unknown."""
+
+    def __init__(self, base_url: str, timeout: float = 600.0,
+                 retries: int = 3, retry_backoff_s: float = 0.2):
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
+        self.retries = retries
+        self.retry_backoff_s = retry_backoff_s
 
     def _call(self, method: str, path: str,
               payload: Optional[dict] = None) -> dict:
@@ -50,17 +77,38 @@ class TuningClient:
         if method == "POST":
             data = json.dumps(payload or {}).encode()
             headers["Content-Type"] = "application/json"
-        req = urllib.request.Request(self.base_url + path, data=data,
-                                     headers=headers, method=method)
-        try:
-            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
-                return json.loads(resp.read() or b"{}")
-        except urllib.error.HTTPError as e:
+        attempts = 1 + (self.retries if _idempotent(method, path) else 0)
+        for attempt in range(attempts):
+            req = urllib.request.Request(self.base_url + path, data=data,
+                                         headers=headers, method=method)
             try:
-                msg = json.loads(e.read() or b"{}").get("error", str(e))
-            except json.JSONDecodeError:
-                msg = str(e)
-            raise TuningServiceError(e.code, msg) from None
+                with urllib.request.urlopen(req,
+                                            timeout=self.timeout) as resp:
+                    return json.loads(resp.read() or b"{}")
+            except urllib.error.HTTPError as e:
+                # the server replied: this is a service error, never a
+                # transport flake — no retry regardless of verb.  (Must
+                # precede URLError: HTTPError subclasses it.)
+                try:
+                    msg = json.loads(e.read() or b"{}").get("error", str(e))
+                except json.JSONDecodeError:
+                    msg = str(e)
+                raise TuningServiceError(e.code, msg) from None
+            except (urllib.error.URLError, ConnectionError,
+                    TimeoutError) as e:
+                reason = getattr(e, "reason", None) or e
+                if attempt + 1 < attempts:
+                    time.sleep(self.retry_backoff_s * 2.0 ** attempt)
+                    continue
+                if not _idempotent(method, path):
+                    raise TuningServiceError(
+                        0, f"transport failure on non-idempotent "
+                        f"{method} {path} ({reason!r}): the server may or "
+                        "may not have applied this request — inspect "
+                        "session state before resending") from e
+                raise TuningServiceError(
+                    0, f"transport failure on {method} {path} after "
+                    f"{attempts} attempts ({reason!r})") from e
 
     # -- daemon-level --------------------------------------------------------
 

@@ -29,6 +29,8 @@ import time
 from dataclasses import replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.resilience import (CircuitBreaker, TransientEvalError,
+                                   classify_failure)
 from repro.core.service import (EvalRequest, EvalResult, EvalTicket,
                                 WorkerPoolEvaluationService, _failed,
                                 _result, _score_one, _ServiceBase)
@@ -101,7 +103,9 @@ class PoolView(_ServiceBase):
         # the release loop so two workers' deliveries cannot interleave
         # their in-order releases.
         with self._cv:
-            mine = self._tickets.pop(uid)
+            mine = self._tickets.pop(uid, None)
+            if mine is None:
+                return          # duplicate delivery: this uid settled once
             res = replace(result, ticket=mine)
             if not self.ordered:
                 self._complete(res)
@@ -126,10 +130,27 @@ class SharedEvaluationPool:
     every waiter that piled onto the same probe key while it ran."""
 
     def __init__(self, backends=None, max_workers: int = 4,
-                 cache_capacity: int = 4096):
+                 cache_capacity: int = 4096,
+                 deadline_s: Optional[float] = None,
+                 breaker_threshold: int = 5, breaker_reset_s: float = 30.0,
+                 breaker_clock=time.monotonic):
         self.inner = WorkloadPool(dict(backends or {}),
-                                  max_workers=max_workers)
+                                  max_workers=max_workers,
+                                  deadline_s=deadline_s)
         self.cache = ProbeCache(cache_capacity)
+        # per-workload circuit breakers: a backend tripping
+        # breaker_threshold CONSECUTIVE transient failures (worker
+        # deaths, probe timeouts — permanent failures are config
+        # verdicts and don't count) sheds subsequent load as inline
+        # failed-transient completions instead of burning workers and
+        # budget against a downed backend; it half-opens after
+        # breaker_reset_s and one successful trial closes it again.
+        # breaker_threshold <= 0 disables breaking entirely.
+        self.breaker_threshold = breaker_threshold
+        self.breaker_reset_s = breaker_reset_s
+        self._breaker_clock = breaker_clock
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self.shed = 0                   # requests refused by open breakers
         # workload -> Space: when registered, probe keys are *projected*
         # (inert/gated knobs dropped) so near-identical probes dedupe
         self.spaces: Dict[str, object] = {}
@@ -169,6 +190,19 @@ class SharedEvaluationPool:
         hits: List[Tuple[int, EvalResult]] = []
         to_submit: List[Tuple[EvalRequest, Optional[Tuple], int]] = []
         for t in tickets:
+            # breaker check BEFORE the cache lookup: a refused probe must
+            # never register as the cache's in-flight owner (waiters piling
+            # onto a probe nobody will run would wedge until eviction)
+            if not self._admit(t.request.workload):
+                with self._lock:
+                    self.shed += 1
+                err = TransientEvalError(
+                    f"circuit breaker open for workload "
+                    f"{t.request.workload!r}: backend shedding load after "
+                    "consecutive transient failures")
+                hits.append((t.uid, replace(
+                    _result(t, _failed(err), 0.0), error_kind="transient")))
+                continue
             key = probe_key(t.request, self.spaces.get(t.request.workload))
             verdict, res = self.cache.lookup(key, (view, t.uid))
             if verdict == "hit":
@@ -186,6 +220,35 @@ class SharedEvaluationPool:
         for vuid, res in hits:
             view._deliver(vuid, res)
 
+    # -- circuit breaking ---------------------------------------------------
+
+    def _breaker(self, workload: str) -> CircuitBreaker:
+        b = self._breakers.get(workload)
+        if b is None:
+            b = self._breakers[workload] = CircuitBreaker(
+                threshold=self.breaker_threshold,
+                reset_s=self.breaker_reset_s, clock=self._breaker_clock)
+        return b
+
+    def _admit(self, workload: str) -> bool:
+        if self.breaker_threshold <= 0:
+            return True
+        with self._lock:
+            return self._breaker(workload).allow()
+
+    def _record_outcome(self, result: EvalResult) -> None:
+        if self.breaker_threshold <= 0:
+            return
+        workload = result.request.workload
+        with self._lock:
+            b = self._breaker(workload)
+            if result.ok or classify_failure(result) != "transient":
+                # ok — or a permanent failure, which is a verdict on the
+                # config, not evidence the backend is down
+                b.record_success()
+            else:
+                b.record_failure()
+
     # -- inner-pool sink ----------------------------------------------------
 
     def _on_result(self, result: EvalResult) -> None:
@@ -193,6 +256,7 @@ class SharedEvaluationPool:
             meta = self._meta.pop(result.ticket.uid, None)
         if meta is None:                    # racing close(); drop
             return
+        self._record_outcome(result)
         key, owner, owner_uid = meta
         deliveries: List[Tuple[PoolView, int]] = [(owner, owner_uid)]
         if key is not None:
@@ -204,6 +268,9 @@ class SharedEvaluationPool:
     # -- lifecycle ----------------------------------------------------------
 
     def stats(self) -> Dict[str, object]:
+        with self._lock:
+            breakers = {wl: b.state for wl, b in self._breakers.items()}
+            shed = self.shed
         return {"cache": self.cache.snapshot(),
                 "workloads": list(self.workloads),
                 "backend_calls": sum(
@@ -211,6 +278,9 @@ class SharedEvaluationPool:
                     for b in self.inner.backends.values()),
                 "inner_in_flight": self.inner.in_flight,
                 "max_workers": self.inner.max_workers,
+                "timed_out": self.inner.timed_out,
+                "breakers": breakers,
+                "shed": shed,
                 "views": self._views}
 
     def close(self):

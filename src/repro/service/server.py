@@ -122,9 +122,32 @@ class TuningServer:
         self.session_ttl = session_ttl
         self._snapshots: Dict[str, dict] = {}
         self._lock = threading.RLock()
-        self._counter = 0
+        # a restarted daemon must not reuse a crashed predecessor's
+        # session ids: a fresh counter would hand out "s0001" again,
+        # colliding with the old s0001's journal namespace (and silently
+        # cross-contaminating its history).  Seed the counter past every
+        # session id visible in the log's namespaces and the sessions
+        # dir (snapshots + manifests).
+        self._counter = self._max_existing_sid()
         self.created_total = 0
         self.evicted_total = 0
+
+    def _max_existing_sid(self) -> int:
+        import re
+        top = 0
+        pat = re.compile(r"^s(\d+)$")
+        for ns in self.log.namespaces():
+            m = pat.match(ns)
+            if m:
+                top = max(top, int(m.group(1)))
+        d = (self.log.root / "sessions") if self.log.root is not None \
+            else None
+        if d is not None and d.is_dir():
+            for p in d.iterdir():
+                m = pat.match(p.name.split(".", 1)[0])
+                if m:
+                    top = max(top, int(m.group(1)))
+        return top
 
     # -- workloads -----------------------------------------------------------
 
@@ -178,7 +201,13 @@ class TuningServer:
             if state is not None:
                 raise ValueError("create-session: pass either 'state' or "
                                  "'resume', not both")
-            snap = self._load_snapshot(resume)
+            try:
+                snap = self._load_snapshot(resume)
+            except KeyError:
+                # no snapshot — the daemon (or its predecessor process)
+                # never evicted this session: crash-recovery path.  The
+                # journal + manifest rebuild it with zero lost tells.
+                return self._resume_from_journal(resume, workload, space)
             if snap["workload"] != workload:
                 raise ValueError(
                     f"resume {resume!r}: snapshot belongs to workload "
@@ -208,6 +237,91 @@ class TuningServer:
             sess = TuningSession(sid, workload, strategy, strat, ctrl,
                                  deterministic=deterministic, budget=budget,
                                  batch_size=batch_size)
+            self.sessions[sid] = sess
+            self._write_manifest(sess, seed, strategy_kwargs, replication)
+            return sess
+
+    def _write_manifest(self, sess: TuningSession, seed: int,
+                        strategy_kwargs: Optional[dict],
+                        replication: Optional[dict]) -> None:
+        """Journal the session's *recipe* next to the snapshots.  The
+        sharded log already journals every tell (the session appends to
+        its namespace before the strategy is told — journal-before-ack);
+        the manifest is the missing half for crash recovery: what
+        strategy, seed and budget to rebuild so the journaled rows can
+        be replayed into a fresh strategy after a daemon killed mid-run
+        (eviction snapshots never happened for it)."""
+        d = self._snapshot_dir()
+        if d is None:
+            return
+        man = {"session": sess.session_id, "workload": sess.workload,
+               "strategy": sess.strategy_name, "budget": sess.budget,
+               "seed": seed, "batch_size": sess.batch_size,
+               "deterministic": sess.deterministic,
+               "tag": sess.controller.tag,
+               "replication": replication,
+               "created_at": sess.created_at}
+        if strategy_kwargs:
+            try:
+                json.dumps(strategy_kwargs)
+                man["strategy_kwargs"] = strategy_kwargs
+            except TypeError:
+                pass    # in-process-only kwargs (live objects): the wire
+                #         path is always JSON-safe, so nothing is lost
+        (d / f"{sess.session_id}.meta.json").write_text(json.dumps(man))
+
+    def _resume_from_journal(self, sid: str, workload: str,
+                             space: Space) -> TuningSession:
+        """Crash-recovery resume: rebuild the session from its manifest
+        and replay every journaled tell from its log namespace.  Unlike
+        a snapshot resume (which copies strategy state into a *new*
+        session id), this continues the *same* session id and namespace
+        — the journal is the ground truth, and subsequent tells keep
+        appending to it."""
+        d = self._snapshot_dir()
+        p = (d / f"{sid}.meta.json") if d is not None else None
+        if p is None or not p.exists():
+            raise KeyError(
+                f"no session snapshot {sid!r} (and no journal manifest "
+                "to rebuild it from)")
+        man = json.loads(p.read_text())
+        if man.get("workload") != workload:
+            raise ValueError(
+                f"resume {sid!r}: journal belongs to workload "
+                f"{man.get('workload')!r}, not {workload!r}")
+        with self._lock:
+            if sid in self.sessions:
+                raise ValueError(f"resume {sid!r}: session is still open "
+                                 "on this daemon")
+        strategy = man.get("strategy", "bo")
+        kwargs = _strategy_kwargs(strategy, man.get("strategy_kwargs"))
+        seed = int(man.get("seed", 0))
+        strat = make_strategy(strategy, space, budget=man.get("budget"),
+                              seed=seed, batch_size=man.get("batch_size"),
+                              **kwargs)
+        ndb = self.log.namespace(sid)
+        rows = [r for r in ndb.records
+                if r.ok and r.value == r.value
+                and r.value not in (float("inf"), float("-inf"))]
+        if rows:
+            Controller._teller(strat)(
+                [dict(r.config) for r in rows],
+                [float(r.value) for r in rows],
+                [float(r.variance) for r in rows])
+        policy = (ReplicationPolicy(**man["replication"])
+                  if man.get("replication") else None)
+        deterministic = bool(man.get("deterministic", True))
+        with self._lock:
+            self.created_total += 1
+            view = self.pool.view(ordered=deterministic)
+            ctrl = Controller(view, db=ndb,
+                              tag=man.get("tag") or strategy,
+                              workload=workload, replication=policy,
+                              seed=seed)
+            sess = TuningSession(sid, workload, strategy, strat, ctrl,
+                                 deterministic=deterministic,
+                                 budget=man.get("budget"),
+                                 batch_size=man.get("batch_size"))
             self.sessions[sid] = sess
             return sess
 

@@ -426,3 +426,125 @@ class TestAdaptiveRacer:
             assert out[0].repeats == 4
         else:
             assert racer.busy == 1
+
+
+# ---------------------------------------------------------------------------
+# retried repeats interleaving with failures (resilience under replication)
+# ---------------------------------------------------------------------------
+
+class FlakySeededFn(SeededFn):
+    """SeededFn whose listed seeds fail transiently on their first call
+    only: a retry of the same sub-repeat seed then succeeds with the
+    same value a never-failed run would have produced."""
+
+    def __init__(self, flaky_seeds=(), permanent_seeds=()):
+        super().__init__()
+        self.flaky = set(flaky_seeds)
+        self.permanent = set(permanent_seeds)
+        self.seen = set()
+
+    def __call__(self, cfg, request=None):
+        seed = request.seed if request is not None else None
+        if seed in self.permanent:
+            self.calls += 1
+            raise ValueError("config infeasible at this seed")
+        if seed in self.flaky and seed not in self.seen:
+            self.seen.add(seed)
+            self.calls += 1
+            raise TimeoutError("benchmark timed out (transient)")
+        return super().__call__(cfg, request)
+
+
+class TestRetriedRepeats:
+    def _repeat_seeds(self, req_seed, k):
+        return [fold_seed(req_seed, i) for i in range(k)]
+
+    def test_retried_repeat_matches_fault_free_aggregate(self):
+        from repro.core.resilience import ResilientService, RetryPolicy
+        req = EvalRequest({"x": 0.4}, seed=33, n_repeats=4)
+        sub = self._repeat_seeds(33, 4)
+
+        clean = ReplicatingService(CallableServiceAdapter(SeededFn()),
+                                   n_repeats=4)
+        (want,) = clean.gather(clean.submit([req]))
+
+        flaky_fn = FlakySeededFn(flaky_seeds=sub[1:3])
+        svc = ReplicatingService(
+            ResilientService(CallableServiceAdapter(flaky_fn),
+                             RetryPolicy(max_attempts=3, backoff_s=0.0)),
+            n_repeats=4)
+        (got,) = svc.gather(svc.submit([req]))
+        # Chan-merge invariants hold through retries: same pooled mean,
+        # same variance-of-mean, same repeat/failure counts
+        assert got.ok and want.ok
+        assert got.value == want.value
+        assert got.variance == want.variance
+        assert (got.repeats, got.failures) == (want.repeats, want.failures)
+
+    def test_exhausted_transient_repeat_counts_as_failure(self):
+        from repro.core.resilience import ResilientService, RetryPolicy
+        req = EvalRequest({"x": 0.4}, seed=7, n_repeats=3)
+        sub = self._repeat_seeds(7, 3)
+        # one sub-repeat seed is permanently broken: retries burn out and
+        # the aggregate must count exactly one failed repeat
+        fn = FlakySeededFn(permanent_seeds=sub[1:2])
+        svc = ReplicatingService(
+            ResilientService(CallableServiceAdapter(fn),
+                             RetryPolicy(max_attempts=2, backoff_s=0.0)),
+            n_repeats=3)
+        (r,) = svc.gather(svc.submit([req]))
+        assert r.ok and r.repeats == 2 and r.failures == 1
+
+        # the failure-widened variance matches a run where that repeat
+        # failed without any resilience layer in the path
+        plain = ReplicatingService(
+            CallableServiceAdapter(
+                FlakySeededFn(permanent_seeds=sub[1:2])), n_repeats=3)
+        (base,) = plain.gather(plain.submit([req]))
+        assert r.value == base.value and r.variance == base.variance
+
+    def test_interleaved_failures_and_retries_stats_order_invariant(self):
+        # RepeatStats is a pure fold: pushing the same per-repeat
+        # outcomes in any interleaving (retried successes landing after
+        # later repeats' failures) produces identical pooled stats
+        from dataclasses import replace as _replace
+        vals = [1.0, 3.0, 2.0]
+        outcomes = [(v, True) for v in vals] + [(0.0, False)] * 2
+        import itertools
+        stats = []
+        for perm in itertools.permutations(outcomes):
+            s = RepeatStats()
+            for v, ok in perm:
+                if ok:
+                    s = s.push(v)
+                else:
+                    s = _replace(s, failures=s.failures + 1)
+            stats.append((s.mean, s.mean_var, s.count, s.failures))
+        assert len(set(stats)) == 1
+        mean, mean_var, count, failures = stats[0]
+        assert mean == pytest.approx(2.0)
+        assert (count, failures) == (3, 2)
+
+    def test_chaos_replicated_run_bit_identical(self):
+        # the whole stack: replication over resilience over seeded chaos
+        # reproduces the fault-free replicated trace bit for bit
+        from repro.core.faults import FaultInjectingService, FaultPlan
+        from repro.core.resilience import RetryPolicy
+        from repro.core.space import Knob, Space
+
+        space = Space((Knob("x", "float", 0.5, lo=0.0, hi=1.0),))
+
+        def run(plan):
+            base = CallableServiceAdapter(SeededFn())
+            svc = base if plan is None else FaultInjectingService(base,
+                                                                  plan)
+            ctrl = Controller(
+                svc, EvalDB(), tag="bo", seed=5,
+                replication=ReplicationPolicy(n_repeats=3, seed=5),
+                resilience=RetryPolicy(max_attempts=8, backoff_s=0.0))
+            strat = make_strategy("random", space, budget=12, seed=5)
+            trace = ctrl.run_async(strat, batch_size=4)
+            return (trace.values,
+                    [(r.repeats, r.variance) for r in ctrl.db.records])
+
+        assert run(None) == run(FaultPlan(transient_rate=0.25, seed=3))

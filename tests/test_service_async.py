@@ -670,3 +670,126 @@ class TestDeprecatedWrappers:
             opt.simulated_annealing(_f, _space(), 4)
         with pytest.warns(DeprecationWarning, match="make_strategy"):
             opt.genetic_algorithm(_f, _space(), 10)
+
+
+# ---------------------------------------------------------------------------
+# mid-flight worker death + the hung-probe watchdog
+# ---------------------------------------------------------------------------
+
+class TestWorkerDeathAndWatchdog:
+    def test_poll_timeout_returns_landed_results_around_dead_worker(self):
+        """poll(timeout) must hand back what HAS completed and come home
+        on time while one worker is wedged mid-flight."""
+        gate = threading.Event()
+
+        def sometimes_dead(c):
+            if c["x"] > 0.5:
+                gate.wait(10.0)             # wedged until released
+                raise RuntimeError("worker died mid-probe")
+            return c["x"]
+
+        svc = WorkerPoolEvaluationService(sometimes_dead, max_workers=3)
+        try:
+            svc.submit([EvalRequest({"x": v}) for v in (0.1, 0.9, 0.2)])
+            landed: list = []
+            t0 = time.monotonic()
+            while len(landed) < 2 and time.monotonic() - t0 < 5.0:
+                landed += svc.poll(timeout=0.1)
+            assert sorted(r.value for r in landed) == [0.1, 0.2]
+            assert svc.in_flight == 1       # the dead one is still out
+            t0 = time.monotonic()
+            assert svc.poll(timeout=0.1) == []
+            assert time.monotonic() - t0 < 2.0
+            gate.set()                      # let it die
+            (r,) = svc.drain()
+            assert not r.ok and "died" in r.error
+        finally:
+            gate.set()
+            svc.close()
+
+    def test_drain_unwedged_by_deadline_watchdog(self):
+        """A probe that never returns completes as failed-transient at
+        deadline_s instead of wedging drain forever."""
+        gate = threading.Event()
+
+        def hung(c):
+            gate.wait(10.0)
+            return 0.0
+
+        svc = WorkerPoolEvaluationService(hung, max_workers=2,
+                                          deadline_s=0.2)
+        try:
+            svc.submit([EvalRequest({"x": 0.5, "y": 0.5}, seed=1)])
+            t0 = time.monotonic()
+            (r,) = svc.drain()
+            assert time.monotonic() - t0 < 5.0
+            assert not r.ok and r.error_kind == "transient"
+            assert "deadline" in r.error and svc.timed_out == 1
+        finally:
+            gate.set()
+            svc.close()
+
+    def test_late_completion_after_watchdog_is_dropped(self):
+        """The real result landing after its watchdog already settled
+        the ticket must vanish (exactly-once), not resurface in poll."""
+        def slow(c):
+            time.sleep(0.4)
+            return 7.0
+
+        svc = WorkerPoolEvaluationService(slow, max_workers=1,
+                                          deadline_s=0.1)
+        try:
+            (t,) = svc.submit([EvalRequest({"x": 0.5, "y": 0.5})])
+            (r,) = svc.gather([t])
+            assert not r.ok and r.error_kind == "transient"
+            time.sleep(0.5)                 # worker finishes late
+            assert svc.poll() == [] and svc.ready == 0
+        finally:
+            svc.close()
+
+    def test_fast_workers_never_hit_the_deadline(self):
+        svc = WorkerPoolEvaluationService(_f, max_workers=2, deadline_s=5.0)
+        try:
+            res = svc.gather(svc.submit(
+                [EvalRequest({"x": 0.1 * i, "y": 0.5}) for i in range(6)]))
+            assert all(r.ok for r in res) and svc.timed_out == 0
+            assert not svc._watchdogs       # every timer cancelled
+        finally:
+            svc.close()
+
+    def test_as_service_forwards_deadline(self):
+        class Poolish:
+            service_kind = "pool"
+            max_workers = 2
+            deadline_s = 1.5
+
+            def __call__(self, c):
+                return 1.0
+
+        svc = as_service(Poolish())
+        assert isinstance(svc, WorkerPoolEvaluationService)
+        assert svc.deadline_s == 1.5
+        svc.close()
+
+    def test_run_async_survives_mid_flight_death(self, tmp_path):
+        """The overlapped loop keeps going when workers die mid-run:
+        watchdogged probes become infeasible rows, the budget is spent
+        exactly once, and the run terminates."""
+        def flaky(c):
+            if c["x"] > 0.7:
+                time.sleep(5.0)             # effectively dead
+            return c["x"]
+
+        svc = WorkerPoolEvaluationService(flaky, max_workers=2,
+                                          deadline_s=0.3)
+        try:
+            db = EvalDB(str(tmp_path / "deaths.jsonl"))
+            ctrl = Controller(svc, db, tag="async", seed=3)
+            strat = RandomStrategy(_space(), budget=12, batch_size=4,
+                                   seed=3)
+            trace = ctrl.run_async(strat, batch_size=4)
+            assert len(db) == 12 and len(trace.values) == 12
+            assert any(not r.ok for r in db.records)
+            assert any(r.ok for r in db.records)
+        finally:
+            svc.close()

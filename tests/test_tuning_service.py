@@ -998,3 +998,268 @@ class TestTransferFrom:
         finally:
             httpd.shutdown()
             srv.close()
+
+
+# ---------------------------------------------------------------------------
+# crash-safe sessions: journal manifests + same-sid resume (PR 10)
+# ---------------------------------------------------------------------------
+
+class TestJournalResume:
+    def test_daemon_killed_mid_run_resumes_with_zero_lost_tells(
+            self, tmp_path):
+        # no evict_idle, no snapshot: the daemon just dies.  Every tell
+        # was journaled before the strategy ack'd, so a fresh daemon
+        # rebuilds the SAME session id from manifest + journal replay.
+        with _server(db_root=str(tmp_path)) as srv:
+            sess = srv.create_session("quad", budget=8, seed=2,
+                                      strategy_kwargs=BO_KW)
+            sid = sess.session_id
+            cfgs = sess.ask(3)
+            sess.tell(cfgs, [4.0, 2.0, 3.0])
+        with _server(db_root=str(tmp_path)) as srv2:
+            resumed = srv2.create_session("quad", budget=8, seed=2,
+                                          strategy_kwargs=BO_KW,
+                                          resume=sid)
+            assert resumed.session_id == sid        # same namespace
+            assert len(resumed.strategy.trace.values) == 3
+            assert resumed.best()[1] == 2.0
+            # and the session keeps appending to the same journal
+            more = resumed.ask(1)
+            resumed.tell(more, [1.5])
+            assert len(srv2.log.namespace(sid).records) == 4
+            assert resumed.best()[1] == 1.5
+
+    def test_snapshot_still_preferred_over_journal(self, tmp_path):
+        import time as _time
+        # an evicted session has a snapshot; resume must keep using it
+        # (new sid) rather than the crash path (same sid)
+        with _server(db_root=str(tmp_path), session_ttl=60.0) as srv:
+            sess = srv.create_session("quad", budget=8, seed=2,
+                                      strategy_kwargs=BO_KW)
+            sid = sess.session_id
+            sess.tell([{"x": 0.1, "y": 0.2}], [1.0])
+            srv.evict_idle(now=_time.time() + 3600)
+            resumed = srv.create_session("quad", budget=8, seed=2,
+                                         strategy_kwargs=BO_KW, resume=sid)
+            assert resumed.session_id != sid
+
+    def test_journal_resume_guards(self, tmp_path):
+        with _server(db_root=str(tmp_path)) as srv:
+            sess = srv.create_session("quad", budget=8, seed=2,
+                                      strategy_kwargs=BO_KW)
+            sid = sess.session_id
+            sess.tell([{"x": 0.1, "y": 0.2}], [1.0])
+            # still open on this daemon: refuse a second driver
+            with pytest.raises(ValueError, match="still open"):
+                srv.create_session("quad", resume=sid)
+        with _server(db_root=str(tmp_path)) as srv2:
+            # wrong workload: the manifest knows whose journal this is
+            with pytest.raises(ValueError, match="belongs to workload"):
+                srv2.create_session("quad2", resume=sid)
+            # no snapshot AND no manifest: same KeyError as before
+            with pytest.raises(KeyError, match="no session snapshot"):
+                srv2.create_session("quad", resume="s9999")
+
+    def test_restarted_daemon_never_reuses_session_ids(self, tmp_path):
+        with _server(db_root=str(tmp_path)) as srv:
+            s1 = srv.create_session("quad", strategy="random", budget=4)
+            s1.tell([{"x": 0.1, "y": 0.2}], [1.0])
+            old = s1.session_id
+        with _server(db_root=str(tmp_path)) as srv2:
+            s2 = srv2.create_session("quad", strategy="random", budget=4)
+            assert s2.session_id != old
+            assert int(s2.session_id[1:]) > int(old[1:])
+
+    def test_run_after_journal_resume_continues_budget(self, tmp_path):
+        with _server(db_root=str(tmp_path)) as srv:
+            sess = srv.create_session("quad", strategy="random", budget=6,
+                                      seed=3)
+            sid = sess.session_id
+            cfgs = sess.ask(2)
+            sess.tell(cfgs, [2.0, 3.0])
+        with _server(db_root=str(tmp_path)) as srv2:
+            resumed = srv2.create_session("quad", strategy="random",
+                                          budget=6, seed=3, resume=sid)
+            # the 2 replayed tells count: spend only the remaining 4
+            trace = resumed.run(budget=4)
+            assert len(resumed.strategy.trace.values) == 6
+            assert min(trace.values) <= 3.0
+
+
+# ---------------------------------------------------------------------------
+# client transport retries (PR 10)
+# ---------------------------------------------------------------------------
+
+class _FlakyTransport:
+    """Counts urlopen calls; fails the first ``fail`` with the given
+    exception, then returns a canned JSON body."""
+
+    def __init__(self, fail, exc, body=b'{"ok": true}'):
+        self.fail = fail
+        self.exc = exc
+        self.body = body
+        self.calls = 0
+
+    def __call__(self, req, timeout=None):
+        self.calls += 1
+        if self.calls <= self.fail:
+            raise self.exc
+        import io
+
+        class _Resp(io.BytesIO):
+            def __enter__(self):
+                return self
+
+            def __exit__(self, *a):
+                pass
+
+        return _Resp(self.body)
+
+
+class TestClientRetries:
+    def test_idempotent_table(self):
+        from repro.service.client import _idempotent
+        assert _idempotent("GET", "/v1/health")
+        assert _idempotent("GET", "/v1/sessions/s0001/state")
+        assert _idempotent("POST", "/v1/sessions/s0001/ask")
+        assert not _idempotent("POST", "/v1/sessions/s0001/tell")
+        assert not _idempotent("POST", "/v1/sessions")
+        assert not _idempotent("POST", "/v1/sessions/s0001/run")
+        assert not _idempotent("POST", "/v1/sessions/s0001/close")
+
+    def test_get_retries_through_transport_flakes(self, monkeypatch):
+        import urllib.request
+        flaky = _FlakyTransport(2, ConnectionResetError("reset by peer"))
+        monkeypatch.setattr(urllib.request, "urlopen", flaky)
+        c = TuningClient("http://127.0.0.1:1", retries=3,
+                         retry_backoff_s=0.0)
+        assert c.health() == {"ok": True}
+        assert flaky.calls == 3
+
+    def test_get_exhausts_with_status_zero(self, monkeypatch):
+        import urllib.request
+        flaky = _FlakyTransport(99, TimeoutError("timed out"))
+        monkeypatch.setattr(urllib.request, "urlopen", flaky)
+        c = TuningClient("http://127.0.0.1:1", retries=2,
+                         retry_backoff_s=0.0)
+        with pytest.raises(TuningServiceError) as ei:
+            c.health()
+        assert ei.value.status == 0
+        assert flaky.calls == 3                  # 1 + retries
+
+    def test_tell_never_resent_on_transport_failure(self, monkeypatch):
+        import urllib.request
+        flaky = _FlakyTransport(99, ConnectionRefusedError("refused"))
+        monkeypatch.setattr(urllib.request, "urlopen", flaky)
+        c = TuningClient("http://127.0.0.1:1", retries=5,
+                         retry_backoff_s=0.0)
+        with pytest.raises(TuningServiceError) as ei:
+            c._call("POST", "/v1/sessions/s0001/tell",
+                    {"configs": [], "values": []})
+        assert ei.value.status == 0
+        assert "may or may not" in ei.value.message
+        assert flaky.calls == 1                  # exactly one attempt
+        with pytest.raises(TuningServiceError) as ei:
+            c.create_session("quad")
+        assert ei.value.status == 0 and flaky.calls == 2
+
+    def test_server_errors_never_retried(self, monkeypatch):
+        import urllib.error
+        import urllib.request
+        calls = [0]
+
+        def boom(req, timeout=None):
+            calls[0] += 1
+            raise urllib.error.HTTPError(
+                req.full_url, 404, "nope", {}, None)
+
+        monkeypatch.setattr(urllib.request, "urlopen", boom)
+        c = TuningClient("http://127.0.0.1:1", retries=5,
+                         retry_backoff_s=0.0)
+        with pytest.raises(TuningServiceError) as ei:
+            c.health()
+        assert ei.value.status == 404 and calls[0] == 1
+
+    def test_retry_enabled_client_over_a_real_wire(self):
+        # a retry-enabled client against a live daemon behaves exactly
+        # like the plain one on the happy path (no spurious resends)
+        srv = _server()
+        httpd, _ = serve_background(srv)
+        try:
+            url = f"http://127.0.0.1:{httpd.server_port}"
+            c = TuningClient(url, retries=2, retry_backoff_s=0.05)
+            assert c.health()["ok"] is True
+            with c.create_session("quad", strategy="random",
+                                  budget=4, seed=1) as sess:
+                cfgs = sess.ask(2)
+                assert sess.tell(cfgs, [1.0, 2.0]) == 2
+                assert sess.best()[1] == 1.0
+        finally:
+            httpd.shutdown()
+            srv.close()
+
+
+# ---------------------------------------------------------------------------
+# breaker + watchdog stats through the daemon (PR 10)
+# ---------------------------------------------------------------------------
+
+class TestPoolResilienceStats:
+    def test_breaker_sheds_load_and_surfaces_in_stats(self):
+        clk = [0.0]
+        dead_calls = [0]
+
+        def dead_backend(cfg):
+            dead_calls[0] += 1
+            raise TimeoutError("benchmark timed out")
+
+        pool = SharedEvaluationPool({"dead": dead_backend}, max_workers=2,
+                                    breaker_threshold=3, breaker_reset_s=5.0,
+                                    breaker_clock=lambda: clk[0])
+        with pool:
+            view = pool.view()
+            # distinct configs so the probe cache never answers for us
+            reqs = [EvalRequest({"x": float(i)}, workload="dead", seed=i)
+                    for i in range(8)]
+            # serial submits: let the breaker see each outcome
+            results = []
+            for r in reqs:
+                results += view.gather(view.submit([r]))
+            assert all(not r.ok for r in results)
+            stats = pool.stats()
+            assert stats["breakers"]["dead"] == "open"
+            assert stats["shed"] == 8 - dead_calls[0] > 0
+            shed = [r for r in results if "circuit breaker open" in r.error]
+            assert len(shed) == stats["shed"]
+            # recovery: clock past reset -> half-open trial; a healed
+            # backend closes the breaker again
+            pool.inner.backends["dead"] = lambda cfg: 1.0
+            clk[0] += 10.0
+            assert pool.stats()["breakers"]["dead"] == "half_open"
+            (ok,) = view.gather(view.submit(
+                [EvalRequest({"x": 99.0}, workload="dead", seed=99)]))
+            assert ok.ok
+            assert pool.stats()["breakers"]["dead"] == "closed"
+
+    def test_permanent_failures_never_trip_the_breaker(self):
+        def picky(cfg):
+            raise ValueError("config infeasible")
+
+        pool = SharedEvaluationPool({"picky": picky}, max_workers=2,
+                                    breaker_threshold=2)
+        with pool:
+            view = pool.view()
+            for i in range(6):
+                (r,) = view.gather(view.submit(
+                    [EvalRequest({"x": float(i)}, workload="picky",
+                                 seed=i)]))
+                assert not r.ok
+            stats = pool.stats()
+            assert stats["breakers"]["picky"] == "closed"
+            assert stats["shed"] == 0
+
+    def test_server_stats_surface_pool_resilience(self):
+        with _server() as srv:
+            pool_stats = srv.stats()["pool"]
+            assert pool_stats["timed_out"] == 0
+            assert pool_stats["shed"] == 0
+            assert pool_stats["breakers"] == {}
